@@ -1,0 +1,35 @@
+"""Shared benchmark plumbing: timed rows in the harness CSV contract
+(``name,us_per_call,derived``) plus one shared trained predictor."""
+from __future__ import annotations
+
+import functools
+import time
+
+ROWS = []
+
+
+def emit(name: str, us_per_call: float, derived: str):
+    row = f"{name},{us_per_call:.1f},{derived}"
+    ROWS.append(row)
+    print(row, flush=True)
+
+
+def timed(fn, *args, **kw):
+    t0 = time.perf_counter()
+    out = fn(*args, **kw)
+    return out, (time.perf_counter() - t0) * 1e6
+
+
+@functools.lru_cache(maxsize=4)
+def shared_predictor(n: int = 2000, epochs: int = 40, num_experts: int = 9):
+    from repro.cluster.workload import train_corpus
+    from repro.core.predictor import MoEPredictor
+    corpus = train_corpus(n=n, seed=1)
+    return MoEPredictor(num_experts=num_experts).fit(corpus, epochs=epochs,
+                                                     lr=1e-3)
+
+
+@functools.lru_cache(maxsize=1)
+def shared_corpus(n: int = 2000):
+    from repro.cluster.workload import train_corpus
+    return tuple(train_corpus(n=n, seed=1))

@@ -1,0 +1,54 @@
+"""Fig. 10: hyper-parameter sensitivity — number of experts K in the
+predictor (10a) and SLO-risk recheck interval tau (10b)."""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import emit, shared_corpus, timed
+from repro.cluster.simulator import Simulator, build_paper_cluster
+from repro.cluster.workload import make_workload, mooncake_like_arrivals, \
+    train_corpus
+from repro.core.metrics import summarize
+from repro.core.predictor import MoEPredictor, evaluate_mae
+from repro.core.router import GoodServeRouter
+
+
+def _bursty(n, scale=3.0, seed=3):
+    reqs = make_workload(n=n, rps=10.0, slo_scale=scale, seed=seed)
+    rng = np.random.default_rng(seed + 1)
+    arr = mooncake_like_arrivals(rng, n, 10.0, cv=2.0)
+    for r, a in zip(reqs, arr):
+        r.arrival = float(a)
+    return reqs
+
+
+def run(n: int = 300, epochs: int = 12):
+    corpus = list(shared_corpus())
+    test = train_corpus(n=300, seed=9)
+    truth = np.array([r.output_len for r in test], np.float32)
+
+    # (a) number of experts
+    for K in (4, 9, 16):
+        pred = MoEPredictor(num_experts=K).fit(corpus, epochs=epochs,
+                                               lr=1e-3)
+        mae = evaluate_mae(pred.predict_requests(test), truth)
+        reqs = _bursty(n)
+        sim = Simulator(build_paper_cluster(), GoodServeRouter(pred), reqs,
+                        tau=50)
+        (out, dur), us = timed(sim.run)
+        s = summarize(out, dur)
+        emit(f"fig10a_K{K}", us,
+             f"mae={mae:.1f} goodput={s['goodput_rps']:.3f} "
+             f"viol={s['violation_ratio']:.3f}")
+
+    # (b) recheck interval tau
+    pred9 = MoEPredictor(num_experts=9).fit(corpus, epochs=epochs, lr=1e-3)
+    for tau in (25, 50, 100, 200):
+        reqs = _bursty(n)
+        sim = Simulator(build_paper_cluster(), GoodServeRouter(pred9), reqs,
+                        tau=tau)
+        (out, dur), us = timed(sim.run)
+        s = summarize(out, dur)
+        emit(f"fig10b_tau{tau}", us,
+             f"goodput={s['goodput_rps']:.3f} "
+             f"viol={s['violation_ratio']:.3f} migr={s['migrations']}")

@@ -1,0 +1,56 @@
+"""Fig. 11: routing overhead at scale — per-request router decision
+latency with 8..512 simulated instances at request intensities up to
+10,000 RPS (the paper's large-scale simulation; decisions are what's
+timed, matching its 'routing overhead' metric)."""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from benchmarks.common import emit, shared_predictor
+from repro.cluster import hardware as hwlib
+from repro.cluster.simulator import Cluster, Instance, SimRequest, Simulator
+from repro.cluster.workload import sample_request
+from repro.core.router import GoodServeRouter
+
+
+def run(sizes=(8, 32, 128, 512), rps_list=(1000, 10000), n_req: int = 512):
+    pred = shared_predictor()
+    fp = hwlib.footprint("llama3.1-8b")
+    rng = np.random.default_rng(0)
+    gpu_names = list(hwlib.GPUS)
+    for m in sizes:
+        instances = [Instance(i, hwlib.GPUS[gpu_names[i % 4]], fp)
+                     for i in range(m)]
+        cluster = Cluster(instances)
+        router = GoodServeRouter(pred)
+        reqs = [sample_request(rng, i) for i in range(n_req)]
+        srs = [SimRequest(req=r) for r in reqs]
+        sim = Simulator(cluster, router, reqs)  # attaches router
+        # warm the estimator so the vectorized path is exercised
+        for i in range(m):
+            cluster.estimator.observe_decode_iter(i, 0.02)
+            cluster.estimator.observe_prefill(i, 100, 0.05)
+            cluster.estimator.observe_queue_wait(i, 0.01)
+        for rps in rps_list:
+            # batched prediction (the paper's optimization): featurize all
+            # requests arriving in one scheduling quantum together
+            t0 = time.perf_counter()
+            preds = router.predictor.predict(
+                [r.prompt for r in reqs], [r.input_len for r in reqs])
+            predict_us = (time.perf_counter() - t0) * 1e6 / n_req
+            t0 = time.perf_counter()
+            for sr, p in zip(srs, preds):
+                sr.pred_out = float(p)
+                ids = router._alive_ids()
+                T, d = router._latencies(sr, ids, p, sr.req.input_len, 0.0)
+                slack = sr.req.slo if sr.req.slo else 10.0
+                feasible = np.nonzero(T <= 0.7 * slack)[0]
+                _ = (ids[int(feasible[np.argmax(d[feasible])])]
+                     if feasible.size else ids[int(np.argmin(T))])
+            select_us = (time.perf_counter() - t0) * 1e6 / n_req
+            total_ms = (predict_us + select_us) / 1e3
+            emit(f"fig11_M{m}_rps{rps}", predict_us + select_us,
+                 f"predict_us={predict_us:.0f} select_us={select_us:.0f} "
+                 f"total_ms={total_ms:.2f}")

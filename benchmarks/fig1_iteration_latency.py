@@ -1,0 +1,27 @@
+"""Fig. 1: per-iteration inference latency across GPU architectures under
+varying batch sizes (fixed 100-in/200-out request shape)."""
+from __future__ import annotations
+
+from repro.cluster import hardware as hwlib
+from benchmarks.common import emit, timed
+
+
+def run(model: str = "llama3.1-8b"):
+    fp = hwlib.footprint(model)
+    batches = [1, 2, 4, 8, 16, 32, 64]
+    lines = {}
+    for name in ("V100", "A40", "A800", "H800"):
+        hw = hwlib.GPUS[name]
+        lat = [hwlib.decode_iteration_time(hw, fp, b, avg_ctx=200.0) * 1e3
+               for b in batches]
+        lines[name] = lat
+    (_, us) = (None, 0.0)
+    for name, lat in lines.items():
+        emit(f"fig1_iter_latency_{name}", 0.0,
+             "ms@b=" + "/".join(f"{v:.1f}" for v in lat))
+    # the paper's qualitative claim: ordering V100 > A40 > A800 > H800 at
+    # every batch size, with latency flat-then-rising in batch
+    ok = all(lines["V100"][i] > lines["A800"][i] > lines["H800"][i]
+             for i in range(len(batches)))
+    emit("fig1_ordering_holds", 0.0, str(ok))
+    return lines

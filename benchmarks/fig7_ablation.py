@@ -1,0 +1,53 @@
+"""Fig. 7: ablation — GoodServe vs GoodServe-without-MoE-prediction
+(history predictor instead; prediction itself cannot be disabled) vs
+GoodServe-without-migration.  Run on a bursty trace where the rectify
+loop matters."""
+from __future__ import annotations
+
+from benchmarks.common import emit, shared_corpus, shared_predictor, timed
+from repro.cluster.simulator import Simulator, build_paper_cluster
+from repro.cluster.workload import make_workload, mooncake_like_arrivals
+from repro.core.metrics import summarize
+from repro.core.predictor import HistoryPredictor
+from repro.core.router import GoodServeRouter
+
+import numpy as np
+
+
+def _bursty(n, scale, seed=3):
+    reqs = make_workload(n=n, rps=10.0, slo_scale=scale, seed=seed)
+    rng = np.random.default_rng(seed + 1)
+    arr = mooncake_like_arrivals(rng, n, 10.0, cv=2.0)
+    for r, a in zip(reqs, arr):
+        r.arrival = float(a)
+    return reqs
+
+
+def run(n: int = 400, scales=(2.0, 3.0)):
+    pred = shared_predictor()
+    hist = HistoryPredictor().fit(list(shared_corpus()))
+    out_rows = {}
+    for scale in scales:
+        variants = {
+            "full": GoodServeRouter(pred),
+            "wo_prediction": GoodServeRouter(hist),
+            "wo_migration": GoodServeRouter(pred, enable_migration=False),
+        }
+        res = {}
+        for name, router in variants.items():
+            reqs = _bursty(n, scale)
+            cluster = build_paper_cluster()
+            sim = Simulator(cluster, router, reqs, tau=50)
+            (out, dur), us = timed(sim.run)
+            s = summarize(out, dur)
+            res[name] = s
+            emit(f"fig7_slo{scale}_{name}", us,
+                 f"goodput={s['goodput_rps']:.3f} "
+                 f"viol={s['violation_ratio']:.3f} migr={s['migrations']}")
+        for v in ("wo_prediction", "wo_migration"):
+            drop = 1 - res[v]["goodput_rps"] / max(res["full"]["goodput_rps"],
+                                                   1e-9)
+            emit(f"fig7_slo{scale}_{v}_goodput_drop", 0.0,
+                 f"{100 * drop:.1f}%")
+        out_rows[scale] = res
+    return out_rows

@@ -1,0 +1,43 @@
+"""Fig. 8: output-length predictor accuracy (normalized MAE) and
+per-request prediction latency, MoE vs LLM-proxy vs single-MLP vs
+history-based."""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import emit, shared_corpus, shared_predictor, timed
+from repro.cluster.workload import train_corpus
+from repro.core.predictor import (HistoryPredictor, MoEPredictor,
+                                  SingleMLPPredictor,
+                                  TransformerProxyPredictor, evaluate_mae,
+                                  timed_predict)
+
+
+def run(n_train: int = 1500, n_test: int = 400, epochs: int = 15):
+    corpus = list(shared_corpus(n_train))
+    test = train_corpus(n=n_test, seed=9)
+    truth = np.array([r.output_len for r in test], np.float32)
+    norm = float(np.mean(truth))
+
+    predictors = {
+        "moe": shared_predictor(n_train, epochs),
+        "single_mlp": SingleMLPPredictor().fit(corpus, epochs=epochs,
+                                               lr=1e-3),
+        "history": HistoryPredictor().fit(corpus),
+        "llm_proxy": TransformerProxyPredictor().fit(corpus,
+                                                     epochs=max(epochs // 3,
+                                                                4)),
+    }
+    maes = {}
+    for name, p in predictors.items():
+        preds, ms_per_req = timed_predict(p, test)
+        mae = evaluate_mae(preds, truth)
+        maes[name] = mae
+        emit(f"fig8_{name}", ms_per_req * 1e3,
+             f"mae={mae:.1f} norm_mae={mae / norm:.3f} "
+             f"latency_ms={ms_per_req:.3f}")
+    emit("fig8_moe_vs_history_err_reduction", 0.0,
+         f"{maes['history'] / max(maes['moe'], 1e-9):.2f}x")
+    emit("fig8_moe_vs_llm_err_reduction", 0.0,
+         f"{maes['llm_proxy'] / max(maes['moe'], 1e-9):.2f}x")
+    return maes

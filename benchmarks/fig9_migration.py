@@ -1,0 +1,30 @@
+"""Fig. 9: average migration latency, token-ID vs KV-cache transfer,
+as a function of request context length — over the paper's 10 GbE and
+over TPU inter-slice DCN (DESIGN.md §3)."""
+from __future__ import annotations
+
+from benchmarks.common import emit
+from repro.cluster import hardware as hwlib
+from repro.core import migration as miglib
+
+
+def run(model: str = "llama3.1-8b"):
+    fp = hwlib.footprint(model)
+    dst = hwlib.GPUS["A800"]
+    rows = {}
+    for net in (miglib.ETHERNET_10G, miglib.TPU_DCN):
+        for ctx in (1024, 4096, 8192, 16384, 32768):
+            tok = miglib.token_id_transfer_latency(net, ctx)
+            kv = miglib.kv_transfer_latency(net, fp, ctx)
+            refill = __import__("repro.cluster.hardware",
+                                fromlist=["prefill_time"]).prefill_time(
+                dst, fp, ctx)
+            rows[(net.name, ctx)] = (tok, kv)
+            emit(f"fig9_{net.name}_ctx{ctx}", 0.0,
+                 f"token_id={tok * 1e3:.1f}ms kv={kv * 1e3:.1f}ms "
+                 f"speedup={kv / tok:.1f}x reprefill={refill * 1e3:.0f}ms")
+    speedups = [kv / tok for (tok, kv) in
+                [rows[("10GbE", c)] for c in (4096, 8192, 16384)]]
+    emit("fig9_10GbE_speedup_range_4k_16k", 0.0,
+         f"{min(speedups):.1f}x..{max(speedups):.1f}x (paper: 7.1x-15.3x)")
+    return rows

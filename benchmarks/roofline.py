@@ -1,0 +1,103 @@
+"""Roofline analysis over the dry-run artifacts (EXPERIMENTS.md §Roofline).
+
+Per (arch x shape) cell, from the compiled single-pod program:
+    compute    = HLO_FLOPs_per_device / peak_FLOPs        (197 TF bf16, v5e)
+    memory     = HLO_bytes_per_device / HBM_bw            (819 GB/s)
+    collective = wire_bytes_per_device / ICI_link_bw      (50 GB/s/link,
+                 conservative single-link ring model)
+plus MODEL_FLOPS = 6·N·D (train) / 2·N_active·D (inference) and the
+useful-compute ratio MODEL_FLOPS / HLO_FLOPs.
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+from pathlib import Path
+
+from benchmarks.common import emit
+
+PEAK_FLOPS = 197e12
+HBM_BW = 819e9
+LINK_BW = 50e9
+
+RESULTS = Path(__file__).resolve().parents[1] / "results"
+
+
+def model_flops_per_device(rec: dict) -> float:
+    from repro.configs import SHAPES, get_config
+    cfg = get_config(rec["arch"])
+    shape = SHAPES[rec["shape"]]
+    n_dev = rec["n_devices"]
+    n_active = cfg.param_count(active_only=True)
+    if shape.kind == "train":
+        tokens = shape.global_batch * shape.seq_len
+        return 6.0 * n_active * tokens / n_dev
+    if shape.kind == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+        return 2.0 * n_active * tokens / n_dev
+    tokens = shape.global_batch  # decode: one token per request
+    return 2.0 * n_active * tokens / n_dev
+
+
+def analyze(rec: dict) -> dict:
+    t_comp = rec["flops_per_device"] / PEAK_FLOPS
+    t_mem = rec["bytes_accessed_per_device"] / HBM_BW
+    t_coll = rec["collective_wire_bytes_per_device"] / LINK_BW
+    terms = {"compute": t_comp, "memory": t_mem, "collective": t_coll}
+    dom = max(terms, key=terms.get)
+    mf = model_flops_per_device(rec)
+    useful = mf / max(rec["flops_per_device"], 1.0)
+    bound = max(terms.values())
+    frac = (mf / PEAK_FLOPS) / max(bound, 1e-12)  # roofline fraction (MFU-like)
+    return {"arch": rec["arch"], "shape": rec["shape"],
+            "t_compute_s": t_comp, "t_memory_s": t_mem,
+            "t_collective_s": t_coll, "dominant": dom,
+            "model_flops_per_dev": mf, "useful_ratio": useful,
+            "roofline_fraction": frac,
+            "mem_gb": (rec["memory"]["argument_bytes"]
+                       + rec["memory"]["temp_bytes"]) / 1e9}
+
+
+_ADVICE = {
+    "compute": "compute-bound: raise MFU via kernel fusion / larger tiles"
+               " or cut redundant FLOPs (remat policy, useful_ratio)",
+    "memory": "HBM-bound: fuse attention/KV reads (Pallas kernels), shrink"
+              " activation round-trips, consider int8/fp8 weights",
+    "collective": "ICI-bound: reshard to cut all-gathers (FSDP prefetch"
+                  " overlap, 2D-sharded MoE, sequence-parallel CE)",
+}
+
+
+def run(pattern: str = "*__pod.json", write: bool = True):
+    rows = []
+    for f in sorted(glob.glob(str(RESULTS / "dryrun" / pattern))):
+        rec = json.load(open(f))
+        if rec.get("multi_pod"):
+            continue
+        a = analyze(rec)
+        rows.append(a)
+        emit(f"roofline_{a['arch']}_{a['shape']}", 0.0,
+             f"comp={a['t_compute_s']:.2e}s mem={a['t_memory_s']:.2e}s "
+             f"coll={a['t_collective_s']:.2e}s dom={a['dominant']} "
+             f"useful={a['useful_ratio']:.2f} "
+             f"roofline_frac={a['roofline_fraction']:.3f}")
+    if write and rows:
+        RESULTS.mkdir(exist_ok=True)
+        with open(RESULTS / "roofline.csv", "w") as fh:
+            cols = list(rows[0])
+            fh.write(",".join(cols) + "\n")
+            for r in rows:
+                fh.write(",".join(str(r[c]) for c in cols) + "\n")
+        with open(RESULTS / "roofline.md", "w") as fh:
+            fh.write("| arch | shape | compute s | memory s | collective s |"
+                     " dominant | useful | roofline frac | mem GB | fix |\n")
+            fh.write("|---|---|---|---|---|---|---|---|---|---|\n")
+            for r in rows:
+                fh.write(
+                    f"| {r['arch']} | {r['shape']} | {r['t_compute_s']:.3e} "
+                    f"| {r['t_memory_s']:.3e} | {r['t_collective_s']:.3e} "
+                    f"| {r['dominant']} | {r['useful_ratio']:.2f} "
+                    f"| {r['roofline_fraction']:.3f} | {r['mem_gb']:.1f} "
+                    f"| {_ADVICE[r['dominant']]} |\n")
+    return rows

@@ -1,0 +1,64 @@
+"""Benchmark harness: one module per paper figure/table + the roofline
+report.  Prints ``name,us_per_call,derived`` CSV rows (harness contract).
+
+Usage:  PYTHONPATH=src python -m benchmarks.run [--only fig2,fig9] [--fast]
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+import traceback
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default="")
+    ap.add_argument("--fast", action="store_true",
+                    help="smaller workloads / fewer epochs")
+    args = ap.parse_args()
+
+    from benchmarks import (fig1_iteration_latency, fig2_motivation,
+                            fig6_end_to_end, fig7_ablation, fig8_predictor,
+                            fig9_migration, fig10_sensitivity,
+                            fig11_overhead, roofline)
+
+    n_sim = 200 if args.fast else 400
+    n_fig2 = 300 if args.fast else 600
+    epochs = 12 if args.fast else 40
+
+    suites = {
+        "fig1": lambda: fig1_iteration_latency.run(),
+        "fig2": lambda: fig2_motivation.run(n=n_fig2),
+        "fig6": lambda: fig6_end_to_end.run(
+            n=n_sim, scales=(1.0, 2.0, 3.0) if args.fast
+            else (1.0, 1.5, 2.0, 2.5, 3.0)),
+        "fig7": lambda: fig7_ablation.run(n=n_sim),
+        "fig8": lambda: fig8_predictor.run(epochs=epochs),
+        "fig9": lambda: fig9_migration.run(),
+        "fig10": lambda: fig10_sensitivity.run(n=min(n_sim, 300),
+                                               epochs=max(epochs - 10, 8)),
+        "fig11": lambda: fig11_overhead.run(),
+        "roofline": lambda: roofline.run(),
+    }
+    only = [s for s in args.only.split(",") if s]
+    failed = []
+    for name, fn in suites.items():
+        if only and name not in only:
+            continue
+        print(f"# --- {name} ---", flush=True)
+        t0 = time.time()
+        try:
+            fn()
+        except Exception:
+            failed.append(name)
+            traceback.print_exc()
+        print(f"# {name} done in {time.time() - t0:.1f}s", flush=True)
+    if failed:
+        print(f"# FAILED suites: {failed}")
+        sys.exit(1)
+    print("# all benchmark suites complete")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,123 @@
+"""Hardware models for heterogeneous serving instances.
+
+Analytic iteration-latency model (roofline style): an engine iteration is
+max(compute, memory) + fixed overhead.  This reproduces the Fig. 1 shape —
+per-iteration latency nearly flat in batch while memory-bound (weights
+dominate reads), then rising once compute-bound — and its cross-GPU
+ordering (V100 > A40 > A800 > H800).
+
+The paper's four testbed GPUs are included for figure reproduction, plus
+TPU entries (the deployment target of this framework).  Per-arch serving
+rates for TPU slices can instead be derived from dry-run roofline terms
+(see benchmarks/roofline.py), which is how the large-scale simulation is
+wired to physics.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+from repro.configs.base import ModelConfig
+
+
+@dataclasses.dataclass(frozen=True)
+class HardwareSpec:
+    name: str
+    tflops: float          # dense bf16/fp16 peak, TFLOP/s
+    hbm_gbps: float        # HBM bandwidth, GB/s
+    mem_gb: float          # usable HBM
+    tp: int = 1            # tensor-parallel degree of the instance
+    mfu: float = 0.45      # achievable fraction of peak flops
+    mbu: float = 0.70      # achievable fraction of peak bandwidth
+    overhead_ms: float = 4.0   # per-iteration fixed cost (kernel launch etc.)
+    max_seqs: int = 64     # engine admission cap (vLLM max_num_seqs-style);
+                           # queues form beyond it, giving the proxy a live
+                           # backpressure signal
+
+    @property
+    def eff_flops(self) -> float:
+        scale = 1.0 if self.tp == 1 else 0.85  # TP comm efficiency
+        return self.tflops * 1e12 * self.mfu * self.tp * scale
+
+    @property
+    def eff_bw(self) -> float:
+        return self.hbm_gbps * 1e9 * self.mbu * self.tp
+
+
+# Published dense fp16/bf16 peaks (no sparsity).
+GPUS = {
+    "V100": HardwareSpec("V100", 125.0, 900.0, 32.0, tp=2),   # paper runs TP=2
+    "A40": HardwareSpec("A40", 149.7, 696.0, 48.0),
+    "A800": HardwareSpec("A800", 312.0, 2039.0, 80.0),
+    "H800": HardwareSpec("H800", 989.0, 3350.0, 80.0),
+    "v5e": HardwareSpec("v5e", 197.0, 819.0, 16.0, overhead_ms=2.0),
+    "v5p": HardwareSpec("v5p", 459.0, 2765.0, 95.0, overhead_ms=2.0),
+    "v4": HardwareSpec("v4", 275.0, 1228.0, 32.0, overhead_ms=2.0),
+}
+
+PAPER_CLUSTER = ("H800", "A800", "A40", "V100")
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelFootprint:
+    """What the hardware model needs to know about a served model."""
+    name: str
+    n_params: float            # total params
+    n_active: float            # active per token (MoE-aware)
+    kv_bytes_per_token: float  # KV-cache bytes per token (all layers)
+    dtype_bytes: int = 2
+
+    @classmethod
+    def from_config(cls, cfg: ModelConfig):
+        kv = 0.0
+        for blk in cfg.layer_list():
+            if blk.mixer in ("full", "window"):
+                kv += 2 * cfg.num_kv_heads * cfg.head_dim * 2
+            elif blk.mixer == "mla":
+                kv += (cfg.mla.kv_lora_rank + cfg.mla.rope_head_dim) * 2
+            # mamba states are O(1), not per token
+        return cls(cfg.name, cfg.param_count(),
+                   cfg.param_count(active_only=True), kv)
+
+
+# The paper's backends, with param counts from our configs (computed lazily
+# to avoid importing model code here).
+def footprint(model_name: str) -> ModelFootprint:
+    from repro.configs import get_config
+    return ModelFootprint.from_config(get_config(model_name))
+
+
+def decode_iteration_time(hw: HardwareSpec, fp: ModelFootprint,
+                          batch: int, avg_ctx: float) -> float:
+    """Seconds for one decode iteration of ``batch`` requests whose mean
+    context length is ``avg_ctx``."""
+    if batch <= 0:
+        return 0.0
+    flops = 2.0 * fp.n_active * batch
+    compute = flops / hw.eff_flops
+    weight_bytes = fp.n_params * fp.dtype_bytes
+    kv_read = batch * avg_ctx * fp.kv_bytes_per_token
+    memory = (weight_bytes + kv_read) / hw.eff_bw
+    return max(compute, memory) + hw.overhead_ms / 1e3
+
+
+def prefill_time(hw: HardwareSpec, fp: ModelFootprint, n_tokens: int,
+                 cached_prefix: int = 0) -> float:
+    """Seconds to prefill ``n_tokens`` (minus reusable cached prefix)."""
+    n = max(n_tokens - cached_prefix, 0)
+    if n == 0:
+        return hw.overhead_ms / 1e3
+    flops = 2.0 * fp.n_active * n
+    compute = flops / hw.eff_flops
+    weight_bytes = fp.n_params * fp.dtype_bytes
+    memory = weight_bytes / hw.eff_bw
+    return max(compute, memory) + hw.overhead_ms / 1e3
+
+
+def max_batch(hw: HardwareSpec, fp: ModelFootprint,
+              avg_total_len: float) -> int:
+    """Memory-capacity bound on concurrent requests (Eq. 1's constraint)."""
+    weight_bytes = fp.n_params * fp.dtype_bytes / max(hw.tp, 1)
+    free = hw.mem_gb * 1e9 * hw.tp - weight_bytes * hw.tp
+    per_req = max(avg_total_len, 1.0) * fp.kv_bytes_per_token
+    return max(int(free * 0.9 / per_req), 1)

@@ -1,0 +1,374 @@
+"""Discrete-event, iteration-granularity simulator for a heterogeneous
+multi-instance serving cluster.
+
+Each instance runs a vLLM-style continuous-batching engine: prefill is
+prioritized and processed one request per iteration; decode iterations
+advance every running request by one token; admission is bounded by KV
+memory (Eq. 1's capacity constraint).  The proxy router observes only
+black-box signals (queue/wait/iteration timings, TPM counters, prefix
+tables) — the same information a production proxy has.
+
+The simulator also supports:
+  * SLO-risk checks every tau decode iterations per request (Sec. 3.4),
+  * token-ID / KV-cache migration with explicit network cost (Fig. 9),
+  * instance failure injection (token-ID resubmission doubles as the
+    fault-tolerance path — DESIGN.md §6),
+  * deterministic seeds for reproducibility.
+"""
+from __future__ import annotations
+
+import dataclasses
+import heapq
+import itertools
+from collections import OrderedDict, deque
+from typing import Callable, Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.cluster import hardware as hwlib
+from repro.cluster.workload import Request
+from repro.core.estimator import EMAEstimator
+from repro.core import migration as miglib
+
+
+@dataclasses.dataclass
+class SimRequest:
+    req: Request
+    state: str = "pending"      # pending|queued|running|migrating|done|failed
+    instance: Optional[int] = None
+    enqueued_at: float = 0.0
+    prefill_len: int = 0        # tokens to (re-)prefill when dequeued
+    skip_prefill: bool = False  # KV-cache migration carries state over
+    tokens_out: int = 0
+    prefill_end: Optional[float] = None
+    finished_at: Optional[float] = None
+    n_migrations: int = 0
+    iters_since_check: int = 0
+    pred_out: float = 0.0       # router's current output-length belief
+    journey: list = dataclasses.field(default_factory=list)  # (t, event, gid)
+    # chunked-prefill progress
+    prefill_progress: int = 0
+    prefill_hit: int = 0
+    prefill_started_at: Optional[float] = None
+
+    @property
+    def context_len(self) -> int:
+        return self.req.input_len + self.tokens_out
+
+    @property
+    def deadline(self) -> float:
+        return self.req.arrival + self.req.slo
+
+
+def group_prefix_len(group: int) -> int:
+    return 64 + (group * 37) % 384
+
+
+class Instance:
+    def __init__(self, iid: int, hw: hwlib.HardwareSpec,
+                 fp: hwlib.ModelFootprint, prefix_capacity: int = 8):
+        self.iid = iid
+        self.hw = hw
+        self.fp = fp
+        self.queue: deque = deque()
+        self.running: List[SimRequest] = []
+        self.alive = True
+        self.busy = False
+        self.prefix_cache: OrderedDict = OrderedDict()
+        self.prefix_capacity = prefix_capacity
+        self._tpm_tokens = 0.0
+        self._tpm_t0 = 0.0
+        # effective-TPOT tracking: time between decode-iteration *ends*
+        # includes prefill stalls, which is the latency running requests
+        # actually experience
+        self._last_decode_end = None
+        self._idle_gap = True
+
+    # -- black-box observables -------------------------------------------
+
+    @property
+    def pending(self) -> int:
+        return len(self.queue) + len(self.running)
+
+    def tpm(self, now: float) -> float:
+        dt = max(now - self._tpm_t0, 1.0)
+        return self._tpm_tokens / dt * 60.0
+
+    def note_tokens(self, n: float, now: float):
+        # decaying one-minute window
+        dt = now - self._tpm_t0
+        if dt > 60.0:
+            self._tpm_tokens *= 0.5
+            self._tpm_t0 = now - 30.0
+        self._tpm_tokens += n
+
+    def mem_used_frac(self) -> float:
+        used = sum(r.context_len for r in self.running) \
+            * self.fp.kv_bytes_per_token
+        weight = self.fp.n_params * self.fp.dtype_bytes
+        cap = self.hw.mem_gb * 1e9 * self.hw.tp - weight
+        return min(used / max(cap, 1.0), 1.0)
+
+    def prefix_hit(self, req: Request) -> int:
+        g = req.prefix_group
+        if g in self.prefix_cache:
+            return min(group_prefix_len(g), req.input_len)
+        return 0
+
+    def note_prefix(self, req: Request):
+        g = req.prefix_group
+        self.prefix_cache[g] = group_prefix_len(g)
+        self.prefix_cache.move_to_end(g)
+        while len(self.prefix_cache) > self.prefix_capacity:
+            self.prefix_cache.popitem(last=False)
+
+    def can_admit(self, sr: SimRequest) -> bool:
+        cap = hwlib.max_batch(self.hw, self.fp,
+                              avg_total_len=max(
+                                  np.mean([r.context_len for r in
+                                           self.running + [sr]]), 1.0))
+        return len(self.running) < min(cap, self.hw.max_seqs)
+
+
+class Cluster:
+    def __init__(self, instances: Sequence[Instance],
+                 net: miglib.NetworkSpec = miglib.ETHERNET_10G,
+                 ema_alpha: float = 0.3):
+        self.instances = list(instances)
+        self.net = net
+        self.estimator = EMAEstimator(alpha=ema_alpha)
+
+    def alive(self) -> List[Instance]:
+        return [g for g in self.instances if g.alive]
+
+
+class Simulator:
+    def __init__(self, cluster: Cluster, router, requests: Sequence[Request],
+                 *, tau: int = 50, migration_mode: str = "token_id",
+                 fail_at: Optional[Dict[int, float]] = None,
+                 max_time: float = 86400.0):
+        self.cluster = cluster
+        self.router = router
+        self.requests = [SimRequest(req=r) for r in requests]
+        self.tau = tau
+        self.migration_mode = migration_mode
+        self.fail_at = fail_at or {}
+        self.max_time = max_time
+        self._events: list = []
+        self._seq = itertools.count()
+        self.now = 0.0
+        self.migration_log: List[Tuple[float, int, int, float]] = []
+        router.attach(self)
+
+    # -- event plumbing -----------------------------------------------------
+
+    def _push(self, t: float, kind: str, payload=None):
+        heapq.heappush(self._events, (t, next(self._seq), kind, payload))
+
+    def enqueue(self, sr: SimRequest, gid: int, t: float,
+                prefill_len: Optional[int] = None,
+                skip_prefill: bool = False):
+        g = self.cluster.instances[gid]
+        sr.instance = gid
+        sr.state = "queued"
+        sr.enqueued_at = t
+        sr.journey.append((round(t, 2), "enq", gid))
+        sr.prefill_len = (sr.context_len if prefill_len is None
+                          else prefill_len)
+        sr.skip_prefill = skip_prefill
+        sr.prefill_progress = 0
+        sr.prefill_hit = 0
+        sr.prefill_started_at = None
+        g.queue.append(sr)
+        if not g.busy and g.alive:
+            g.busy = True
+            self._push(t, "step", gid)
+
+    def migrate(self, sr: SimRequest, dst: int, t: float, mode: str):
+        """Move a running/queued request to another instance."""
+        src = self.cluster.instances[sr.instance]
+        if sr in src.running:
+            src.running.remove(sr)
+        elif sr in src.queue:
+            src.queue.remove(sr)
+        else:
+            return
+        sr.state = "migrating"
+        sr.n_migrations += 1
+        fp = src.fp
+        if mode == "kv":
+            lat = miglib.kv_transfer_latency(self.cluster.net, fp,
+                                             sr.context_len)
+            skip = True
+        else:
+            lat = miglib.token_id_transfer_latency(self.cluster.net,
+                                                   sr.context_len)
+            skip = False  # re-prefill happens at the target queue
+        self.migration_log.append((t, sr.instance, dst, lat))
+        self._push(t + lat, "migrate_arrive", (sr, dst, skip))
+
+    # -- engine model ---------------------------------------------------------
+
+    prefill_chunk = 512    # chunked-prefill token budget per iteration
+
+    def _step(self, gid: int, t: float):
+        """One hybrid engine iteration (chunked-prefill continuous
+        batching): the decode batch advances one token while up to
+        ``prefill_chunk`` prompt tokens of the admitted queue-head are
+        prefilled in the same iteration (Sarathi/vLLM-style mixing)."""
+        g = self.cluster.instances[gid]
+        if not g.alive:
+            g.busy = False
+            return
+        est = self.cluster.estimator
+
+        # pick the prefill candidate (FCFS among admittable)
+        pf = None
+        for cand in list(g.queue):
+            if g.can_admit(cand):
+                pf = cand
+                break
+        if pf is not None and pf.prefill_started_at is None:
+            pf.prefill_started_at = t
+            pf.prefill_hit = g.prefix_hit(pf.req)
+            est.observe_queue_wait(gid, t - pf.enqueued_at)
+
+        b = len(g.running)
+        if pf is None and b == 0:
+            g.busy = False
+            g._idle_gap = True
+            return
+
+        # --- iteration time: decode batch + prefill chunk share -----------
+        avg_ctx = (float(np.mean([r.context_len for r in g.running]))
+                   if g.running else 0.0)
+        dt_decode = (hwlib.decode_iteration_time(g.hw, g.fp, b, avg_ctx)
+                     if b else 0.0)
+        chunk_tokens = 0
+        if pf is not None:
+            if pf.skip_prefill:
+                remaining_pf = 0
+            else:
+                remaining_pf = (pf.prefill_len - pf.prefill_hit
+                                - pf.prefill_progress)
+            chunk_tokens = min(self.prefill_chunk, max(remaining_pf, 0))
+            dt_chunk = 2.0 * g.fp.n_active * chunk_tokens / g.hw.eff_flops
+        else:
+            dt_chunk = 0.0
+        if b:
+            dt = dt_decode + dt_chunk
+        else:
+            weight_read = g.fp.n_params * g.fp.dtype_bytes / g.hw.eff_bw
+            dt = max(dt_chunk, weight_read) + g.hw.overhead_ms / 1e3
+        t_next = t + dt
+
+        # --- prefill progress ---------------------------------------------
+        if pf is not None:
+            pf.prefill_progress += chunk_tokens
+            finished_pf = (pf.skip_prefill
+                           or pf.prefill_progress
+                           >= pf.prefill_len - pf.prefill_hit)
+            if finished_pf:
+                g.queue.remove(pf)
+                if not pf.skip_prefill:
+                    est.observe_prefill(
+                        gid, max(pf.prefill_len - pf.prefill_hit, 1),
+                        t_next - pf.prefill_started_at)
+                    g.note_prefix(pf.req)
+                    g.note_tokens(pf.prefill_len, t)
+                pf.state = "running"
+                pf.prefill_end = t_next
+                pf.journey.append((round(t_next, 2), "run", gid))
+                g.running.append(pf)
+
+        # --- decode progress -----------------------------------------------
+        if b:
+            if g._last_decode_end is not None and not g._idle_gap:
+                eff = t_next - g._last_decode_end
+            else:
+                eff = dt
+            est.observe_decode_iter(gid, eff)
+            g._last_decode_end = t_next
+            g._idle_gap = False
+            g.note_tokens(b, t)
+            done, at_risk = [], []
+            for sr in g.running[:b]:
+                sr.tokens_out += 1
+                sr.iters_since_check += 1
+                if sr.tokens_out >= sr.req.output_len:
+                    done.append(sr)
+                elif sr.iters_since_check >= self.tau:
+                    sr.iters_since_check = 0
+                    at_risk.append(sr)
+            for sr in done:
+                g.running.remove(sr)
+                sr.state = "done"
+                sr.finished_at = t_next
+                sr.journey.append((round(t_next, 2), "done", gid))
+            for sr in at_risk:
+                self.router.on_risk_check(sr, t_next)
+
+        if g.running or g.queue:
+            self._push(t_next, "step", gid)
+        else:
+            g.busy = False
+            g._idle_gap = True
+
+    def _fail_instance(self, gid: int, t: float):
+        g = self.cluster.instances[gid]
+        g.alive = False
+        g.busy = False
+        victims = list(g.queue) + list(g.running)
+        g.queue.clear()
+        g.running.clear()
+        for sr in victims:
+            sr.state = "pending"
+            sr.instance = None
+        self.router.on_failure(gid, victims, t)
+
+    # -- main loop -------------------------------------------------------------
+
+    def run(self):
+        for sr in self.requests:
+            self._push(sr.req.arrival, "arrival", sr)
+        for gid, t in self.fail_at.items():
+            self._push(t, "fail", gid)
+        tick = 0.25
+        self._push(tick, "tick", None)
+
+        finished = 0
+        total = len(self.requests)
+        while self._events and self.now < self.max_time:
+            t, _, kind, payload = heapq.heappop(self._events)
+            self.now = t
+            if kind == "arrival":
+                sr = payload
+                gid = self.router.route(sr, t)
+                self.enqueue(sr, gid, t)
+            elif kind == "step":
+                self._step(payload, t)
+            elif kind == "migrate_arrive":
+                sr, dst, skip = payload
+                if not self.cluster.instances[dst].alive:
+                    dst = self.router.route(sr, t)
+                    skip = False
+                self.enqueue(sr, dst, t, skip_prefill=skip)
+            elif kind == "fail":
+                self._fail_instance(payload, t)
+            elif kind == "tick":
+                self.router.on_tick(t)
+                if any(not sr.state == "done" for sr in self.requests):
+                    self._push(t + tick, "tick", None)
+            finished = sum(1 for sr in self.requests if sr.state == "done")
+            if finished == total:
+                break
+        return self.requests, self.now
+
+
+def build_paper_cluster(model: str = "llama3.1-8b",
+                        gpus: Sequence[str] = hwlib.PAPER_CLUSTER,
+                        net: miglib.NetworkSpec = miglib.ETHERNET_10G
+                        ) -> Cluster:
+    fp = hwlib.footprint(model)
+    instances = [Instance(i, hwlib.GPUS[g], fp) for i, g in enumerate(gpus)]
+    return Cluster(instances, net=net)

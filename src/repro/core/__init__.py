@@ -1,0 +1,8 @@
+"""GoodServe core: the paper's contribution.
+
+- predictor:  MoE-style output-length prediction (Sec. 3.2)
+- estimator:  EMA-smoothed black-box instance-capability estimation (Sec. 3.3)
+- router:     just-enough instance selection + baselines (Sec. 3.4, Alg. 1)
+- migration:  SLO-risk-triggered token-ID request migration (Sec. 3.4)
+- metrics:    goodput / SLO-violation accounting (Sec. 4.1)
+"""

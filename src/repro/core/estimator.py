@@ -1,0 +1,70 @@
+"""EMA-smoothed, black-box instance-capability estimation (paper Sec. 3.3).
+
+The estimator sees only *observable timing events* — request wait times,
+prefill durations, decode iteration durations — never engine internals
+(batch size, GPU type, queue policy).  Per the paper: batched serving +
+rarely-changing local config means per-iteration time is stable over short
+horizons (law of large numbers), so recent-past EMAs suffice; the order of
+instance preference is what must be right, not the absolute values.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict
+
+
+@dataclasses.dataclass
+class InstanceEstimate:
+    q: float = 0.05    # expected queuing delay, seconds
+    p: float = 1e-4    # per-token prefill latency, seconds
+    d: float = 0.03    # per-token decode latency (TPOT), seconds
+    n_obs: int = 0
+
+
+class EMAEstimator:
+    """GPUStatusMonitor: maintains (q_g, p_g, d_g) per instance."""
+
+    def __init__(self, alpha: float = 0.3):
+        self.alpha = alpha
+        self.est: Dict[int, InstanceEstimate] = {}
+
+    def _get(self, gid: int) -> InstanceEstimate:
+        if gid not in self.est:
+            self.est[gid] = InstanceEstimate()
+        return self.est[gid]
+
+    def _ema(self, old: float, new: float) -> float:
+        return self.alpha * new + (1 - self.alpha) * old
+
+    # -- observation hooks (called by the serving engine / simulator) -------
+
+    def observe_queue_wait(self, gid: int, wait_s: float):
+        e = self._get(gid)
+        e.q = self._ema(e.q, wait_s)
+        e.n_obs += 1
+
+    def observe_prefill(self, gid: int, n_tokens: int, dt_s: float):
+        if n_tokens <= 0:
+            return
+        e = self._get(gid)
+        e.p = self._ema(e.p, dt_s / n_tokens)
+        e.n_obs += 1
+
+    def observe_decode_iter(self, gid: int, dt_s: float):
+        """One engine iteration advanced every running request by one
+        token, so the per-request TPOT observation is the iteration time."""
+        e = self._get(gid)
+        e.d = self._ema(e.d, dt_s)
+        e.n_obs += 1
+
+    # -- queries --------------------------------------------------------------
+
+    def snapshot(self, gid: int) -> InstanceEstimate:
+        return self._get(gid)
+
+    def expected_latency(self, gid: int, input_len: int, pred_out: float,
+                         prefix_hit: int = 0) -> float:
+        """T(r,g) = q_g + p_g * (L_in - H) + d_g * L_out   (paper Eq. 2)."""
+        e = self._get(gid)
+        return (e.q + e.p * max(input_len - prefix_hit, 0)
+                + e.d * max(pred_out, 1.0))

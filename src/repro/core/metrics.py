@@ -1,0 +1,39 @@
+"""Goodput / SLO metrics (paper Sec. 4.1)."""
+from __future__ import annotations
+
+from typing import Sequence
+
+
+def goodput(finished, total_duration: float) -> float:
+    """Average number of requests completing within their E2E-SLO per
+    second (paper metric 1)."""
+    ok = sum(1 for r in finished
+             if r.finished_at is not None
+             and (r.finished_at - r.req.arrival) <= r.req.slo)
+    return ok / max(total_duration, 1e-9)
+
+
+def slo_violation_ratio(finished) -> float:
+    """Fraction of requests missing their E2E-SLO (paper metric 2);
+    unfinished requests count as violations."""
+    n = len(finished)
+    if n == 0:
+        return 0.0
+    bad = sum(1 for r in finished
+              if r.finished_at is None
+              or (r.finished_at - r.req.arrival) > r.req.slo)
+    return bad / n
+
+
+def summarize(finished, total_duration: float) -> dict:
+    lat = [(r.finished_at - r.req.arrival) for r in finished
+           if r.finished_at is not None]
+    return {
+        "goodput_rps": goodput(finished, total_duration),
+        "violation_ratio": slo_violation_ratio(finished),
+        "n": len(finished),
+        "n_finished": len(lat),
+        "mean_latency_s": sum(lat) / max(len(lat), 1),
+        "migrations": sum(getattr(r, "n_migrations", 0) for r in finished),
+        "duration_s": total_duration,
+    }

@@ -1,0 +1,66 @@
+"""Request-migration cost models (paper Sec. 3.4 + Fig. 9).
+
+GoodServe migrates by shipping *token IDs* and re-prefilling at the
+target; the rejected alternative ships the KV cache.  Both are modeled so
+Fig. 9's trade-off is reproducible, for the paper's 10 GbE testbed and
+for TPU-fleet links (DCN) — the conclusion is link-speed dependent, which
+is why we carry both (DESIGN.md §3).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+from repro.cluster import hardware as hwlib
+
+TOKEN_ID_BYTES = 4
+
+
+@dataclasses.dataclass(frozen=True)
+class NetworkSpec:
+    name: str
+    bandwidth_gbps: float      # usable, in gigaBITS/s
+    rtt_ms: float = 0.5
+
+    @property
+    def bytes_per_s(self) -> float:
+        return self.bandwidth_gbps * 1e9 / 8.0
+
+
+ETHERNET_10G = NetworkSpec("10GbE", 10.0, 0.5)       # the paper's testbed
+TPU_DCN = NetworkSpec("tpu-dcn", 100.0, 0.3)         # inter-slice DCN
+
+# engine-side coordination per migration: pause/drain the request at the
+# source, serialize state, RPC to the target scheduler, resume.  Applies
+# to both transfer modes; measured vLLM-style KV extraction additionally
+# runs well below line rate (layer-by-layer gather + serialization).
+FIXED_OVERHEAD_S = 0.1
+KV_EXTRACT_EFFICIENCY = 0.6
+
+
+def token_id_transfer_latency(net: NetworkSpec, context_len: int) -> float:
+    """State-transfer latency of token-ID migration (Fig. 9's metric):
+    the re-prefill at the target is the separate 'small prefill overhead'
+    the paper trades for it (Sec. 3.4)."""
+    xfer = context_len * TOKEN_ID_BYTES / net.bytes_per_s
+    return FIXED_OVERHEAD_S + net.rtt_ms / 1e3 + xfer
+
+
+def kv_transfer_latency(net: NetworkSpec, fp, context_len: int) -> float:
+    bytes_ = context_len * fp.kv_bytes_per_token
+    return (FIXED_OVERHEAD_S + net.rtt_ms / 1e3
+            + bytes_ / (net.bytes_per_s * KV_EXTRACT_EFFICIENCY))
+
+
+def token_id_migration_latency(net: NetworkSpec, hw_dst, fp,
+                               context_len: int,
+                               prefix_hit: int = 0) -> float:
+    """End-to-end: transfer token IDs + re-prefill at the target (this is
+    what the simulator charges a migrated request)."""
+    refill = hwlib.prefill_time(hw_dst, fp, context_len, prefix_hit)
+    return token_id_transfer_latency(net, context_len) + refill
+
+
+def kv_cache_migration_latency(net: NetworkSpec, fp,
+                               context_len: int) -> float:
+    """End-to-end KV-cache migration; no re-prefill needed."""
+    return kv_transfer_latency(net, fp, context_len)

@@ -1,0 +1,348 @@
+"""Output-length predictors (paper Sec. 3.2 + Fig. 8 baselines).
+
+``MoEPredictor`` is the paper's contribution: a gating router (2-layer
+MLP) over K expert MLPs (4 layers each), trained in two phases —
+(1) partition half the data into K subsets by discretizing input/output
+lengths into sqrt(K) tiers and train one expert per subset;
+(2) freeze experts, train the router end-to-end on the other half.
+At the paper scale (K=9, feature dim 2048, expert hidden 1408/1024/512)
+this is ~44.7M parameters, matching the reported 45.1M.
+
+Baselines: ``SingleMLPPredictor`` (STAR-style 4-layer MLP),
+``HistoryPredictor`` (Past-Future-style lookup over recent same-bucket
+requests), and ``TransformerProxyPredictor`` (stand-in for the S^3
+DistilBERT predictor — a small transformer encoder over token hashes,
+deliberately heavier per call; we cannot ship DistilBERT offline, see
+DESIGN.md §8.4).
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from functools import partial
+from typing import List, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.data.features import TfIdfVectorizer, feature_dim, featurize
+from repro.training.optimizer import AdamWConfig, adamw_update, init_opt_state
+
+# ---------------------------------------------------------------------------
+# MLP plumbing
+# ---------------------------------------------------------------------------
+
+def _init_mlp(key, dims):
+    ks = jax.random.split(key, len(dims) - 1)
+    return [{"w": jax.random.normal(k, (a, b), jnp.float32) * (a ** -0.5),
+             "b": jnp.zeros((b,), jnp.float32)}
+            for k, a, b in zip(ks, dims[:-1], dims[1:])]
+
+
+def _apply_mlp(layers, x):
+    for i, l in enumerate(layers):
+        x = x @ l["w"] + l["b"]
+        if i < len(layers) - 1:
+            x = jax.nn.relu(x)
+    return x
+
+
+def _moe_apply(params, x):
+    gate_logits = _apply_mlp(params["router"], x)          # [N, K]
+    probs = jax.nn.softmax(gate_logits, axis=-1)
+    expert_out = jnp.stack([_apply_mlp(e, x)[:, 0]
+                            for e in params["experts"]], axis=-1)  # [N, K]
+    return jnp.sum(probs * expert_out, axis=-1), probs
+
+
+def _fit(loss_fn, params, data, *, epochs, batch, lr, seed=0,
+         trainable=None):
+    """Minimal AdamW fit loop.  ``trainable`` masks frozen subtrees."""
+    x, y = data
+    n = x.shape[0]
+    opt_cfg = AdamWConfig(lr=lr, weight_decay=0.01, warmup_steps=20,
+                          total_steps=max(epochs * max(n // batch, 1), 1),
+                          schedule="cosine")
+    opt = init_opt_state(params)
+    rng = np.random.default_rng(seed)
+
+    @jax.jit
+    def step(params, opt, xb, yb):
+        loss, grads = jax.value_and_grad(loss_fn)(params, xb, yb)
+        if trainable is not None:
+            grads = jax.tree.map(lambda g, t: g * t, grads, trainable)
+        new_p, new_o, _ = adamw_update(opt_cfg, params, grads, opt)
+        return new_p, new_o, loss
+
+    loss = jnp.float32(0)
+    for _ in range(epochs):
+        order = rng.permutation(n)
+        for s in range(0, n, batch):
+            idx = order[s:s + batch]
+            params, opt, loss = step(params, opt, x[idx], y[idx])
+    return params, float(loss)
+
+
+# ---------------------------------------------------------------------------
+# The paper's MoE-style predictor
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class PredictorScale:
+    feature_dim: int = 512
+    expert_hidden: tuple = (256, 128, 64)
+    router_hidden: int = 128
+
+
+PAPER_SCALE = PredictorScale(2048, (1408, 1024, 512), 512)   # ~44.7M params
+FAST_SCALE = PredictorScale(512, (256, 128, 64), 128)        # CI-friendly
+
+
+class MoEPredictor:
+    name = "moe"
+
+    def __init__(self, num_experts: int = 9,
+                 scale: PredictorScale = FAST_SCALE, seed: int = 0):
+        self.K = num_experts
+        self.scale = scale
+        self.vec = TfIdfVectorizer(dim=scale.feature_dim)
+        self.params = None
+        self._predict_jit = None
+        self._seed = seed
+
+    # -- two-phase training (paper Sec. 3.2) --------------------------------
+
+    def fit(self, requests, *, epochs: int = 60, batch: int = 256,
+            lr: float = 3e-4):
+        prompts = [r.prompt for r in requests]
+        self.vec.fit(prompts)
+        x = featurize(self.vec, prompts, [r.input_len for r in requests])
+        y = np.log1p([float(r.output_len) for r in requests]
+                     ).astype(np.float32)
+        x = jnp.asarray(x)
+        y = jnp.asarray(y)
+        n = x.shape[0]
+        F = x.shape[1]
+        half = n // 2
+        key = jax.random.PRNGKey(self._seed)
+        kr, *ke = jax.random.split(key, 1 + self.K)
+
+        edims = (F,) + tuple(self.scale.expert_hidden) + (1,)
+        params = {
+            "router": _init_mlp(kr, (F, self.scale.router_hidden, self.K)),
+            "experts": [_init_mlp(k, edims) for k in ke],
+        }
+
+        # Phase 1: tier partition of the first half, one expert per subset.
+        t = int(round(self.K ** 0.5))
+        xin = np.asarray(x[:half, -2]) * 2048.0           # input length feat
+        yout = np.asarray(y[:half])
+        in_edges = np.quantile(xin, np.linspace(0, 1, t + 1)[1:-1])
+        out_edges = np.quantile(yout, np.linspace(0, 1, t + 1)[1:-1])
+        tier = (np.digitize(xin, in_edges) * t
+                + np.digitize(yout, out_edges))           # [half] in [0,K)
+
+        def expert_loss(ep, xb, yb):
+            pred = _apply_mlp(ep, xb)[:, 0]
+            return jnp.mean((pred - yb) ** 2)
+
+        for k in range(self.K):
+            idx = np.nonzero(tier == k)[0]
+            if len(idx) < 8:                              # degenerate tier
+                idx = np.arange(half)
+            params["experts"][k], _ = _fit(
+                expert_loss, params["experts"][k],
+                (x[idx], y[idx]), epochs=epochs, batch=batch, lr=lr,
+                seed=self._seed + k)
+
+        # Phase 2: freeze experts, train the router on the second half.
+        def router_loss(p, xb, yb):
+            pred, _ = _moe_apply(p, xb)
+            return jnp.mean((pred - yb) ** 2)
+
+        trainable = {
+            "router": jax.tree.map(lambda _: 1.0, params["router"]),
+            "experts": jax.tree.map(lambda _: 0.0, params["experts"]),
+        }
+        params, _ = _fit(router_loss, params, (x[half:], y[half:]),
+                         epochs=epochs, batch=batch, lr=lr,
+                         seed=self._seed + 101, trainable=trainable)
+        self.params = params
+        self._predict_jit = jax.jit(lambda p, xb: _moe_apply(p, xb)[0])
+        return self
+
+    def n_params(self) -> int:
+        return sum(a.size for a in jax.tree.leaves(self.params))
+
+    # -- batched inference ---------------------------------------------------
+
+    def predict(self, prompts, input_lens, generated=None) -> np.ndarray:
+        x = jnp.asarray(featurize(self.vec, prompts, input_lens, generated))
+        logy = self._predict_jit(self.params, x)
+        return np.expm1(np.asarray(logy)).clip(1.0, None)
+
+    def predict_requests(self, requests) -> np.ndarray:
+        return self.predict([r.prompt for r in requests],
+                            [r.input_len for r in requests])
+
+
+# ---------------------------------------------------------------------------
+# Baselines (Fig. 8)
+# ---------------------------------------------------------------------------
+
+class SingleMLPPredictor(MoEPredictor):
+    """STAR-style single 4-layer MLP [arXiv:2510.13668]."""
+    name = "single_mlp"
+
+    def fit(self, requests, *, epochs: int = 60, batch: int = 256,
+            lr: float = 3e-4):
+        prompts = [r.prompt for r in requests]
+        self.vec.fit(prompts)
+        x = jnp.asarray(featurize(self.vec, prompts,
+                                  [r.input_len for r in requests]))
+        y = jnp.asarray(np.log1p([float(r.output_len) for r in requests]
+                                 ).astype(np.float32))
+        F = x.shape[1]
+        edims = (F,) + tuple(self.scale.expert_hidden) + (1,)
+        params = _init_mlp(jax.random.PRNGKey(self._seed), edims)
+
+        def loss(p, xb, yb):
+            return jnp.mean((_apply_mlp(p, xb)[:, 0] - yb) ** 2)
+
+        params, _ = _fit(loss, params, (x, y), epochs=epochs, batch=batch,
+                         lr=lr, seed=self._seed)
+        self.params = params
+        self._predict_jit = jax.jit(lambda p, xb: _apply_mlp(p, xb)[:, 0])
+        return self
+
+
+class HistoryPredictor:
+    """Past-Future-style history lookup [ASPLOS'25]: running mean of
+    recent outputs in the same (family-agnostic) prompt-length bucket."""
+    name = "history"
+
+    def __init__(self, n_buckets: int = 16, window: int = 256):
+        self.n_buckets = n_buckets
+        self.window = window
+        self.hist = [[] for _ in range(n_buckets)]
+        self.default = 256.0
+        self.edges = None
+
+    def fit(self, requests, **_):
+        lens = np.array([r.input_len for r in requests], np.float32)
+        self.edges = np.quantile(lens, np.linspace(0, 1, self.n_buckets + 1)
+                                 [1:-1])
+        for r in requests:
+            self.observe(r.input_len, r.output_len)
+        return self
+
+    def _bucket(self, input_len) -> int:
+        return int(np.digitize(input_len, self.edges))
+
+    def observe(self, input_len: int, output_len: int):
+        h = self.hist[self._bucket(input_len)]
+        h.append(float(output_len))
+        if len(h) > self.window:
+            del h[0]
+
+    def predict(self, prompts, input_lens, generated=None) -> np.ndarray:
+        out = []
+        for il in input_lens:
+            h = self.hist[self._bucket(il)]
+            out.append(np.mean(h[-self.window:]) if h else self.default)
+        return np.asarray(out, np.float32)
+
+    def predict_requests(self, requests) -> np.ndarray:
+        return self.predict([r.prompt for r in requests],
+                            [r.input_len for r in requests])
+
+
+class TransformerProxyPredictor:
+    """Stand-in for the S^3 DistilBERT predictor [NeurIPS'23]: a 2-layer
+    transformer encoder over hashed token ids.  Higher per-call cost than
+    the MLP ensemble, mirroring the paper's overhead comparison."""
+    name = "llm_proxy"
+
+    def __init__(self, vocab: int = 4096, d: int = 256, n_layers: int = 2,
+                 max_len: int = 64, seed: int = 0):
+        self.vocab, self.d, self.n_layers, self.max_len = (vocab, d,
+                                                           n_layers, max_len)
+        self._seed = seed
+        self.params = None
+        self._predict_jit = None
+
+    def _tokenize(self, prompts) -> np.ndarray:
+        from repro.data.features import _hash_token
+        out = np.zeros((len(prompts), self.max_len), np.int32)
+        for i, p in enumerate(prompts):
+            toks = p.lower().split()[: self.max_len]
+            out[i, :len(toks)] = [1 + _hash_token(t, self.vocab - 1)
+                                  for t in toks]
+        return out
+
+    def _init(self):
+        key = jax.random.PRNGKey(self._seed)
+        ks = jax.random.split(key, 2 + 4 * self.n_layers)
+        d = self.d
+        p = {"embed": jax.random.normal(ks[0], (self.vocab, d)) * 0.02,
+             "head": _init_mlp(ks[1], (d, d, 1)), "layers": []}
+        for i in range(self.n_layers):
+            o = 2 + 4 * i
+            p["layers"].append({
+                "wq": jax.random.normal(ks[o], (d, d)) * d ** -0.5,
+                "wk": jax.random.normal(ks[o + 1], (d, d)) * d ** -0.5,
+                "wv": jax.random.normal(ks[o + 2], (d, d)) * d ** -0.5,
+                "ff": _init_mlp(ks[o + 3], (d, 4 * d, d)),
+            })
+        return p
+
+    @staticmethod
+    def _apply(p, toks):
+        x = p["embed"][toks]                     # [N, L, d]
+        mask = (toks > 0)[:, None, :]
+        for l in p["layers"]:
+            q, k, v = x @ l["wq"], x @ l["wk"], x @ l["wv"]
+            s = jnp.einsum("nld,nmd->nlm", q, k) / x.shape[-1] ** 0.5
+            s = jnp.where(mask, s, -1e30)
+            x = x + jnp.einsum("nlm,nmd->nld", jax.nn.softmax(s, -1), v)
+            x = x + _apply_mlp(l["ff"], x)
+        pooled = x.mean(axis=1)
+        return _apply_mlp(p["head"], pooled)[:, 0]
+
+    def fit(self, requests, *, epochs: int = 20, batch: int = 128,
+            lr: float = 3e-4):
+        toks = jnp.asarray(self._tokenize([r.prompt for r in requests]))
+        y = jnp.asarray(np.log1p([float(r.output_len) for r in requests]
+                                 ).astype(np.float32))
+        params = self._init()
+
+        def loss(p, xb, yb):
+            return jnp.mean((self._apply(p, xb) - yb) ** 2)
+
+        self.params, _ = _fit(loss, params, (toks, y), epochs=epochs,
+                              batch=batch, lr=lr, seed=self._seed)
+        self._predict_jit = jax.jit(self._apply)
+        return self
+
+    def predict(self, prompts, input_lens=None, generated=None) -> np.ndarray:
+        toks = jnp.asarray(self._tokenize(prompts))
+        return np.expm1(np.asarray(self._predict_jit(self.params, toks))
+                        ).clip(1.0, None)
+
+    def predict_requests(self, requests) -> np.ndarray:
+        return self.predict([r.prompt for r in requests], None)
+
+
+def evaluate_mae(pred: np.ndarray, truth: np.ndarray) -> float:
+    return float(np.mean(np.abs(pred - truth)))
+
+
+def timed_predict(predictor, requests, repeats: int = 3):
+    """(predictions, per-request latency in ms) for Fig. 8b."""
+    preds = predictor.predict_requests(requests)      # warmup + result
+    t0 = time.perf_counter()
+    for _ in range(repeats):
+        predictor.predict_requests(requests)
+    dt = (time.perf_counter() - t0) / repeats
+    return preds, dt * 1000.0 / max(len(requests), 1)

@@ -1,0 +1,346 @@
+"""Request routers: GoodServe (Alg. 1) + the paper's baselines (Sec. 2.2).
+
+All routers see the same black-box cluster observables.  GoodServe
+additionally consults its output-length predictor and the EMA estimator,
+makes the *just-enough* selection (slowest feasible instance), and
+migrates SLO-at-risk requests at runtime.  The Oracle router gets
+ground-truth lengths and the analytic hardware model — the upper bound of
+Fig. 2.
+"""
+from __future__ import annotations
+
+import time
+from typing import List, Optional
+
+import numpy as np
+
+from repro.cluster import hardware as hwlib
+from repro.cluster.simulator import SimRequest, Simulator
+
+
+class Router:
+    name = "base"
+
+    def __init__(self, seed: int = 0):
+        self.rng = np.random.default_rng(seed)
+        self.sim: Optional[Simulator] = None
+        self.decision_times: List[float] = []
+
+    def attach(self, sim: Simulator):
+        self.sim = sim
+
+    @property
+    def cluster(self):
+        return self.sim.cluster
+
+    def _alive_ids(self):
+        return [g.iid for g in self.cluster.instances if g.alive]
+
+    # -- interface ----------------------------------------------------------
+
+    def route(self, sr: SimRequest, t: float) -> int:
+        t0 = time.perf_counter()
+        gid = self._route(sr, t)
+        self.decision_times.append(time.perf_counter() - t0)
+        return gid
+
+    def _route(self, sr: SimRequest, t: float) -> int:
+        raise NotImplementedError
+
+    def on_risk_check(self, sr: SimRequest, t: float):
+        pass
+
+    def on_tick(self, t: float):
+        pass
+
+    def on_failure(self, gid: int, victims, t: float):
+        """Token-ID resubmission of a dead instance's requests."""
+        for sr in victims:
+            new_gid = self.route(sr, t)
+            self.sim.enqueue(sr, new_gid, t)
+
+
+# ---------------------------------------------------------------------------
+# Baselines
+# ---------------------------------------------------------------------------
+
+class RandomP2C(Router):
+    """Power-of-two-choices random routing [Ray Serve default]."""
+    name = "random"
+
+    def _route(self, sr, t):
+        ids = self._alive_ids()
+        a, b = self.rng.choice(ids, size=2, replace=len(ids) < 2)
+        ga, gb = self.cluster.instances[a], self.cluster.instances[b]
+        return a if ga.pending <= gb.pending else b
+
+
+class RoundRobin(Router):
+    name = "round_robin"
+    _next = 0
+
+    def _route(self, sr, t):
+        ids = self._alive_ids()
+        gid = ids[self._next % len(ids)]
+        self._next += 1
+        return gid
+
+
+class LeastRequest(Router):
+    """AIBrix least-request: fewest pending requests."""
+    name = "least_request"
+
+    def _route(self, sr, t):
+        return min(self._alive_ids(),
+                   key=lambda i: self.cluster.instances[i].pending)
+
+
+class LowestTPM(Router):
+    """LiteLLM lowest tokens-per-minute utilization."""
+    name = "lowest_tpm"
+
+    def _route(self, sr, t):
+        return min(self._alive_ids(),
+                   key=lambda i: self.cluster.instances[i].tpm(t))
+
+
+class PrefixCacheRouter(Router):
+    """AIBrix prefix-cache: max prefix hit, ties by least pending."""
+    name = "prefix_cache"
+
+    def _route(self, sr, t):
+        return min(self._alive_ids(),
+                   key=lambda i: (-self.cluster.instances[i]
+                                  .prefix_hit(sr.req),
+                                  self.cluster.instances[i].pending))
+
+
+class PrebleRouter(Router):
+    """Preble-style joint prefix + load scoring [arXiv:2407.00023]:
+    cost = (1 - hit fraction) * input_len (prefill work) + queued work."""
+    name = "preble"
+
+    def _route(self, sr, t):
+        best, best_score = None, float("inf")
+        for i in self._alive_ids():
+            g = self.cluster.instances[i]
+            hit = g.prefix_hit(sr.req)
+            prefill_work = (sr.req.input_len - hit)
+            queued_work = sum(q.prefill_len for q in g.queue) \
+                + 64 * len(g.running)
+            score = prefill_work + queued_work
+            if score < best_score:
+                best, best_score = i, score
+        return best
+
+
+class LlumnixRouter(Router):
+    """Llumnix-style [OSDI'24]: route to max free memory; periodic
+    load-balancing via (KV) migration between most/least loaded."""
+    name = "llumnix"
+    imbalance_threshold = 4
+
+    def _route(self, sr, t):
+        return min(self._alive_ids(),
+                   key=lambda i: self.cluster.instances[i].mem_used_frac())
+
+    def on_tick(self, t):
+        ids = self._alive_ids()
+        if len(ids) < 2:
+            return
+        loads = [(self.cluster.instances[i].pending, i) for i in ids]
+        loads.sort()
+        (lo_n, lo), (hi_n, hi) = loads[0], loads[-1]
+        if hi_n - lo_n >= self.imbalance_threshold:
+            g_hi = self.cluster.instances[hi]
+            if g_hi.queue:
+                sr = g_hi.queue[-1]
+                self.sim.migrate(sr, lo, t, mode="token_id")
+            elif g_hi.running:
+                sr = max(g_hi.running, key=lambda r: r.context_len)
+                self.sim.migrate(sr, lo, t, mode="kv")
+
+
+# ---------------------------------------------------------------------------
+# GoodServe (Algorithm 1) + Oracle
+# ---------------------------------------------------------------------------
+
+class GoodServeRouter(Router):
+    """Predict-and-rectify goodput routing (paper Sec. 3.4, Alg. 1)."""
+    name = "goodserve"
+
+    def __init__(self, predictor, seed: int = 0, enable_migration: bool = True,
+                 migration_mode: str = "token_id", margin: float = 0.7):
+        super().__init__(seed)
+        self.predictor = predictor
+        self.enable_migration = enable_migration
+        self.migration_mode = migration_mode
+        # feasibility margin: T <= margin * slack.  The EMA estimates lag a
+        # growing batch and exclude this request's own interference, so
+        # riding the exact T == D_r boundary tips marginal requests over;
+        # beta < 1 absorbs that noise (rectified further by migration).
+        self.margin = margin
+        # in-flight accounting: (t, gid, expected prefill seconds) of
+        # requests routed recently — work the proxy KNOWS is coming but the
+        # EMAs haven't observed yet.  Kills the cold-herd where a burst all
+        # sees the same stale "feasible" slow instance.
+        self._recent_routes: list = []
+        self.inflight_window_s = 3.0
+
+    def _predict(self, sr: SimRequest) -> float:
+        out = self.predictor.predict([sr.req.prompt], [sr.req.input_len],
+                                     [sr.tokens_out])
+        return float(out[0])
+
+    def _queue_estimate(self, i: int, t: float) -> float:
+        """AVGWAITTIME(g) as a *live* signal: combine the EMA of completed
+        waits with the current queue's in-progress waits, its expected
+        drain (queued prefill work x EMA prefill rate), and the unobserved
+        prefill work of just-routed requests — all proxy-side observable,
+        so still black-box w.r.t. the engine."""
+        est = self.cluster.estimator
+        g = self.cluster.instances[i]
+        q_ema = est.snapshot(i).q
+        self._recent_routes = [r for r in self._recent_routes
+                               if t - r[0] < self.inflight_window_s]
+        inflight = sum(w for (t0, gid, w) in self._recent_routes if gid == i)
+        if not g.queue:
+            return q_ema + inflight
+        live = float(np.mean([t - s.enqueued_at for s in g.queue]))
+        drain = est.snapshot(i).p * sum(s.prefill_len for s in g.queue)
+        return max(q_ema, live + drain) + inflight
+
+    def _latencies(self, sr: SimRequest, ids, remaining_out: float,
+                   context_len: int, t: float):
+        """Vectorized T(r,g) over candidate instances (Eq. 2)."""
+        est = self.cluster.estimator
+        q = np.array([self._queue_estimate(i, t) for i in ids])
+        p = np.array([est.snapshot(i).p for i in ids])
+        d = np.array([est.snapshot(i).d for i in ids])
+        hits = np.array([self.cluster.instances[i].prefix_hit(sr.req)
+                         for i in ids], np.float32)
+        T = q + p * np.maximum(context_len - hits, 0) + d * remaining_out
+        return T, d
+
+    def _current_d(self, gid: int, sr: SimRequest) -> float:
+        return self.cluster.estimator.snapshot(gid).d
+
+    max_migrations = 2
+    min_obs = 3          # cold-start: explore before trusting EMAs
+    _rr_cold = 0
+
+    def _route(self, sr, t):
+        sr.pred_out = self._predict(sr)
+        ids = self._alive_ids()
+        est = self.cluster.estimator
+        cold = [i for i in ids if est.snapshot(i).n_obs < self.min_obs]
+        if cold:
+            self._rr_cold += 1
+            return cold[self._rr_cold % len(cold)]
+        T, d = self._latencies(sr, ids, sr.pred_out, sr.req.input_len, t)
+        slack = sr.req.slo - (t - sr.req.arrival)
+        feasible = np.nonzero(T <= self.margin * slack)[0]
+        if feasible.size:                       # just-enough: slowest feasible
+            k = feasible[np.argmax(d[feasible])]
+        else:                                    # best-effort fallback
+            k = int(np.argmin(T - slack))
+        gid = ids[int(k)]
+        est = self.cluster.estimator
+        work = est.snapshot(gid).p * sr.req.input_len \
+            + 0.1 * est.snapshot(gid).d * sr.pred_out
+        self._recent_routes.append((t, gid, work))
+        return gid
+
+    def on_risk_check(self, sr: SimRequest, t: float):
+        if (not self.enable_migration or sr.state != "running"
+                or sr.n_migrations >= self.max_migrations):
+            return
+        # rectify: re-predict remaining length, re-read instance status
+        total_pred = max(self._predict(sr), sr.tokens_out + 1.0)
+        remaining = total_pred - sr.tokens_out
+        sr.pred_out = total_pred
+        gid = sr.instance
+        finish_here = self._current_d(gid, sr) * remaining
+        slack = sr.deadline - t
+        if finish_here <= slack:
+            return
+        # current instance will violate: find a stronger feasible target,
+        # still just-enough among feasible (Sec. 3.4)
+        ids = [i for i in self._alive_ids() if i != gid]
+        if not ids:
+            return
+        T, d = self._latencies(sr, ids, remaining, sr.context_len, t)
+        feasible = np.nonzero(T <= self.margin * slack)[0]
+        if feasible.size:
+            k = int(feasible[np.argmax(d[feasible])])
+        else:
+            k = int(np.argmin(T))
+            # only move if materially better than staying (avoid ping-pong)
+            if T[k] >= 0.8 * finish_here:
+                return
+        self.sim.migrate(sr, ids[k], t, mode=self.migration_mode)
+
+
+class OracleRouter(GoodServeRouter):
+    """Ground-truth lengths + analytic hardware rates, same just-enough
+    policy (the Fig. 2 oracle).
+
+    Even ground truth is myopic about *future arrivals*: a request admitted
+    exactly at the feasibility edge is pushed over it by the batch
+    interference of requests routed afterwards.  The margin reserves
+    headroom for that — it models future load, not estimation error."""
+    name = "oracle"
+
+    def __init__(self, seed: int = 0, enable_migration: bool = True,
+                 margin: float = 0.7):
+        Router.__init__(self, seed)
+        self.enable_migration = enable_migration
+        self.migration_mode = "token_id"
+        self.margin = margin
+        self._recent_routes = []
+        self.inflight_window_s = 3.0
+
+    def _predict(self, sr):
+        return float(sr.req.output_len)
+
+    def _latencies(self, sr, ids, remaining_out, context_len, t):
+        self._recent_routes = [r for r in self._recent_routes
+                               if t - r[0] < self.inflight_window_s]
+        T, d = [], []
+        for i in ids:
+            g = self.cluster.instances[i]
+            b = max(len(g.running), 1)
+            avg_ctx = float(np.mean([r.context_len for r in g.running])) \
+                if g.running else context_len
+            d_i = hwlib.decode_iteration_time(g.hw, g.fp, b + 1, avg_ctx)
+            hit = g.prefix_hit(sr.req)
+            q_i = sum(hwlib.prefill_time(g.hw, g.fp, qq.prefill_len)
+                      for qq in g.queue)
+            q_i += sum(w for (t0, gid, w) in self._recent_routes if gid == i)
+            p_full = hwlib.prefill_time(g.hw, g.fp, context_len, hit)
+            T.append(q_i + p_full + d_i * remaining_out)
+            d.append(d_i)
+        return np.asarray(T), np.asarray(d)
+
+    def _current_d(self, gid, sr):
+        g = self.cluster.instances[gid]
+        b = max(len(g.running), 1)
+        avg_ctx = float(np.mean([r.context_len for r in g.running])) \
+            if g.running else sr.context_len
+        return hwlib.decode_iteration_time(g.hw, g.fp, b, avg_ctx)
+
+
+ALL_BASELINES = [RandomP2C, RoundRobin, LeastRequest, LowestTPM,
+                 PrefixCacheRouter, PrebleRouter, LlumnixRouter]
+
+
+def make_router(name: str, predictor=None, **kw) -> Router:
+    table = {c.name: c for c in ALL_BASELINES}
+    if name in table:
+        return table[name](**kw)
+    if name == "goodserve":
+        assert predictor is not None
+        return GoodServeRouter(predictor, **kw)
+    if name == "oracle":
+        return OracleRouter(**kw)
+    raise KeyError(name)

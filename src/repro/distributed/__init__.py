@@ -1,0 +1,3 @@
+from repro.distributed.context import ShardCtx
+
+__all__ = ["ShardCtx"]

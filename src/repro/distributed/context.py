@@ -1,0 +1,87 @@
+"""Sharding context threaded through model code.
+
+``ShardCtx`` tells layers which mesh axes exist so that layers with
+custom collective layouts (the shard_map MoE dispatch) can pick explicit
+partitionings; everything else relies on pjit auto-propagation from
+in/out shardings plus ``with_sharding_constraint`` hints.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Optional, Tuple
+
+import jax
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+
+@dataclasses.dataclass(frozen=True)
+class ShardCtx:
+    mesh: Any = None
+    data_axes: Tuple[str, ...] = ("data",)   # batch / token axes (incl. "pod")
+    model_axis: str = "model"                # tensor-parallel axis
+    seq_axis: Optional[str] = None           # KV-sequence sharding (long ctx)
+    use_shard_map_moe: bool = True
+
+    @property
+    def enabled(self) -> bool:
+        return self.mesh is not None
+
+    def axis_size(self, name: str) -> int:
+        return self.mesh.shape[name] if self.enabled else 1
+
+    @property
+    def dp_size(self) -> int:
+        s = 1
+        for a in self.data_axes:
+            s *= self.axis_size(a)
+        return s
+
+    @property
+    def tp_size(self) -> int:
+        return self.axis_size(self.model_axis)
+
+    def constraint(self, x, *spec):
+        """Apply a sharding constraint if a mesh is active (no-op otherwise)."""
+        if not self.enabled:
+            return x
+        return jax.lax.with_sharding_constraint(
+            x, NamedSharding(self.mesh, P(*spec)))
+
+    def batch_spec_entry(self, batch_size: int):
+        """Largest prefix of data axes that divides the batch dim."""
+        axes = []
+        s = 1
+        for a in self.data_axes:
+            if batch_size % (s * self.axis_size(a)) == 0:
+                axes.append(a)
+                s *= self.axis_size(a)
+        if not axes:
+            return None
+        return tuple(axes) if len(axes) > 1 else axes[0]
+
+    def model_axis_if_divides(self, dim: int):
+        if self.enabled and dim % self.tp_size == 0:
+            return self.model_axis
+        return None
+
+    def seq_entry(self, L: int):
+        """Megatron-style sequence parallelism: shard the token dim of the
+        residual stream over the model axis between blocks, so remat scan
+        carries are 1/tp-sized.  QKV/FFN projections re-gather locally."""
+        if self.enabled and L > 1 and L % self.tp_size == 0:
+            return self.model_axis
+        return None
+
+    def heads_spec(self, n_heads: int, head_dim: int):
+        """(head_entry, hd_entry) for sharding a [.., H, hd] tensor over the
+        model axis: prefer whole heads, fall back to head_dim, else None."""
+        if not self.enabled:
+            return None
+        if n_heads % self.tp_size == 0:
+            return (self.model_axis, None)
+        if head_dim % self.tp_size == 0:
+            return (None, self.model_axis)
+        return None
+
+
+NULL_CTX = ShardCtx()

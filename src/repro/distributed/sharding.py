@@ -1,0 +1,198 @@
+"""Parameter / optimizer / cache / input PartitionSpec rules.
+
+Strategy (see DESIGN.md §6):
+  * tensor parallel over the ``model`` axis: attention heads (or head_dim
+    when head count doesn't divide), FFN hidden, MoE expert-ff, SSD heads,
+    vocab for embed/lm_head;
+  * FSDP over the ``data`` axis: every param's remaining largest dim is
+    additionally sharded when it divides, so optimizer state for 100B+
+    archs fits 16 GB/chip; the ``pod`` axis stays pure DP (params
+    replicated, gradient all-reduce over DCN);
+  * decode KV caches shard batch over data axes and heads over model,
+    falling back to sequence sharding (flash-decoding style) when heads
+    don't divide or batch==1 (long_500k).
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ModelConfig, ShapeSpec
+
+# (model_dim, fsdp_dim) per leaf name; dims are for the *unstacked* param.
+# model_dim/fsdp_dim of None means "never shard that way".
+_RULES_2D = {
+    # embed / lm_head never take FSDP: their d-dim contraction in the CE
+    # loss already uses the data axis for the batch, and double-use forces
+    # per-chunk all-gathers of the whole table
+    "embed": (0, None),     # [V, d]
+    "lm_head": (1, None),   # [d, V]
+    "prefix_proj": (1, 0),
+    "wq": (1, 0), "wk": (1, 0), "wv": (1, 0),
+    "wo": (0, 1),
+    "w_gate": (1, 0), "w_up": (1, 0),
+    "w_down": (0, 1),
+    "w_uk": (1, 0), "w_uv": (1, 0),
+    "w_dkv": (None, 0),     # small latent down-proj: replicate over model
+    "w_z": (1, 0), "w_x": (1, 0), "w_dt": (1, 0),
+    "w_B": (None, 0), "w_C": (None, 0),
+    "conv_x": (1, None), "conv_B": (None, None), "conv_C": (None, None),
+    "out_proj": (0, 1),
+    "router": (None, None),
+}
+_RULES_3D = {                # MoE expert banks [E, d, ff] / [E, ff, d]
+    "w_gate": (2, 1), "w_up": (2, 1), "w_down": (1, 2),
+}
+_VEC_MODEL = {"conv_bx"}     # 1-D vectors sharded over model if divisible
+
+
+def _leaf_spec(name: str, shape, tp: int, fsdp: int, *,
+               model_axis: str, fsdp_axis, stacked: bool,
+               do_fsdp: bool) -> P:
+    core = list(shape[1:]) if stacked else list(shape)
+    entries = [None] * len(core)
+    if len(core) >= 3 and name in _RULES_3D:
+        mdim, fdim = _RULES_3D[name]
+    elif len(core) == 2 and name in _RULES_2D:
+        mdim, fdim = _RULES_2D[name]
+    elif len(core) == 1 and name in _VEC_MODEL:
+        mdim, fdim = 0, None
+    else:
+        mdim, fdim = None, None
+    if mdim is not None and core[mdim] % tp == 0 and core[mdim] >= tp:
+        entries[mdim] = model_axis
+    if (do_fsdp and fdim is not None and fsdp_axis is not None
+            and core[fdim] % fsdp == 0 and core[fdim] >= fsdp
+            and entries[fdim] is None):
+        entries[fdim] = fsdp_axis
+    if stacked:
+        entries = [None] + entries
+    return P(*entries)
+
+
+def _path_leaf_name(path) -> str:
+    last = path[-1]
+    return getattr(last, "key", getattr(last, "name", str(last)))
+
+
+def make_param_specs(params_tree, mesh, *, model_axis: str = "model",
+                     fsdp_axis: Optional[str] = "data",
+                     fsdp: bool = True):
+    """PartitionSpec pytree for params (or same-structure opt m/v)."""
+    tp = int(mesh.shape[model_axis])
+    fs = int(mesh.shape[fsdp_axis]) if (fsdp and fsdp_axis) else 1
+
+    def spec_of(path, leaf):
+        name = _path_leaf_name(path)
+        stacked = any(getattr(e, "key", None) == "stages" for e in path)
+        if not hasattr(leaf, "ndim") or leaf.ndim == 0:
+            return P()
+        return _leaf_spec(name, leaf.shape, tp, fs, model_axis=model_axis,
+                          fsdp_axis=fsdp_axis if fsdp else None,
+                          stacked=stacked, do_fsdp=fsdp)
+
+    return jax.tree_util.tree_map_with_path(spec_of, params_tree)
+
+
+def make_opt_specs(param_specs):
+    return {"m": param_specs, "v": param_specs, "step": P()}
+
+
+# ---------------------------------------------------------------------------
+# Cache and input specs
+# ---------------------------------------------------------------------------
+
+def _batch_entry(batch: int, mesh, data_axes) -> Optional[object]:
+    axes = []
+    s = 1
+    for a in data_axes:
+        n = int(mesh.shape[a])
+        if batch % (s * n) == 0:
+            axes.append(a)
+            s *= n
+    if not axes:
+        return None
+    return tuple(axes) if len(axes) > 1 else axes[0]
+
+
+def _seq_entry(seq: int, mesh, axes_free) -> Optional[object]:
+    """Shard a sequence dim over as many free axes as divide it."""
+    use = []
+    s = 1
+    for a in axes_free:
+        n = int(mesh.shape[a])
+        if seq % (s * n) == 0 and seq // (s * n) >= 128:
+            use.append(a)
+            s *= n
+    if not use:
+        return None
+    return tuple(use) if len(use) > 1 else use[0]
+
+
+def make_cache_specs(cfg: ModelConfig, batch: int, max_len: int, mesh, *,
+                     model_axis: str = "model", data_axes=("data",)):
+    """PartitionSpec pytree matching ``init_cache`` structure."""
+    tp = int(mesh.shape[model_axis])
+    b_entry = _batch_entry(batch, mesh, data_axes)
+    used = (b_entry if isinstance(b_entry, tuple)
+            else (b_entry,) if b_entry else ())
+    free_for_seq = [a for a in data_axes if a not in used]
+
+    def attn_spec(S):
+        KV = cfg.num_kv_heads
+        if KV % tp == 0:
+            return P(None, b_entry, _seq_entry(S, mesh, free_for_seq),
+                     model_axis, None)
+        # heads don't divide: flash-decoding style sequence sharding
+        seq = _seq_entry(S, mesh, [model_axis] + free_for_seq)
+        return P(None, b_entry, seq, None, None)
+
+    def mla_spec(S):
+        seq = _seq_entry(S, mesh, [model_axis] + free_for_seq)
+        return P(None, b_entry, seq, None)
+
+    stages = []
+    for stage in cfg.stages:
+        sc = {}
+        for pi, blk in enumerate(stage.pattern):
+            if blk.mixer in ("full", "window"):
+                S = min(blk.window, max_len) if blk.window else max_len
+                sc[f"blk{pi}"] = {"k": attn_spec(S), "v": attn_spec(S)}
+            elif blk.mixer == "mla":
+                sc[f"blk{pi}"] = {"ckv": mla_spec(max_len),
+                                  "kr": mla_spec(max_len)}
+            elif blk.mixer == "mamba":
+                nh = cfg.ssm.n_heads(cfg.d_model)
+                di = cfg.ssm.d_inner(cfg.d_model)
+                h_entry = model_axis if nh % tp == 0 else None
+                di_entry = model_axis if di % tp == 0 else None
+                sc[f"blk{pi}"] = {
+                    "conv": {"x": P(None, b_entry, None, di_entry),
+                             "B": P(None, b_entry, None, None),
+                             "C": P(None, b_entry, None, None)},
+                    "ssm": P(None, b_entry, h_entry, None, None)}
+        stages.append(sc)
+    return {"stages": stages, "pos": P(None)}
+
+
+def input_sharding(mesh, batch: int, data_axes=("data",), extra_dims: int = 1):
+    b = _batch_entry(batch, mesh, data_axes)
+    return P(b, *([None] * extra_dims))
+
+
+def as_named(tree_specs, mesh):
+    return jax.tree.map(
+        lambda s: NamedSharding(mesh, s),
+        tree_specs, is_leaf=lambda x: isinstance(x, P))
+
+
+def sds_with_sharding(shapes_tree, specs_tree, mesh):
+    """ShapeDtypeStruct pytree carrying NamedShardings (dry-run inputs)."""
+    def mk(sds, spec):
+        return jax.ShapeDtypeStruct(sds.shape, sds.dtype,
+                                    sharding=NamedSharding(mesh, spec))
+    return jax.tree.map(mk, shapes_tree, specs_tree,
+                        is_leaf=lambda x: isinstance(x, P))

@@ -1,0 +1,139 @@
+"""Per-instance serving engine: continuous batching over the JAX model.
+
+This is the functional engine the proxy routes to — it runs real prefill
+and decode steps (the same ``repro.models`` code the dry-run lowers for
+TPU), manages request lifecycles, reports the black-box timing events the
+EMA estimator consumes, and supports token-ID checkpointing of in-flight
+requests (the migration/fault-tolerance path).  On CPU it serves reduced
+configs; on TPU the same class serves full configs on a mesh.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.distributed.context import NULL_CTX, ShardCtx
+from repro.models import decode_step, init_cache, init_params, prefill
+from repro.models.model import logits_fn
+
+
+@dataclasses.dataclass
+class EngineRequest:
+    rid: int
+    tokens: List[int]                 # prompt + generated so far
+    prompt_len: int
+    max_new_tokens: int = 64
+    eos_id: Optional[int] = None
+    done: bool = False
+
+    @property
+    def generated(self) -> List[int]:
+        return self.tokens[self.prompt_len:]
+
+
+class InferenceEngine:
+    """Static-batch continuous decoding engine (batch slots + shared
+    dense cache; the paged Pallas kernel is the TPU fast path)."""
+
+    def __init__(self, cfg: ModelConfig, params=None, *, max_batch: int = 8,
+                 max_len: int = 256, ctx: ShardCtx = NULL_CTX, seed: int = 0,
+                 greedy: bool = True):
+        self.cfg = cfg
+        self.ctx = ctx
+        self.max_batch = max_batch
+        self.max_len = max_len
+        self.greedy = greedy
+        self.params = params if params is not None else init_params(
+            cfg, jax.random.PRNGKey(seed), dtype=jnp.float32)
+        self.cache = init_cache(cfg, max_batch, max_len, dtype=jnp.float32)
+        self.slots: List[Optional[EngineRequest]] = [None] * max_batch
+        self.queue: List[EngineRequest] = []
+        self._decode = jax.jit(
+            lambda p, c, t: decode_step(p, cfg, c, t, ctx=ctx))
+        # timing observations for the estimator (black-box signals)
+        self.events: List[tuple] = []
+        self.completed: List[EngineRequest] = []
+
+    # -- request lifecycle -----------------------------------------------------
+
+    def submit(self, req: EngineRequest):
+        self.queue.append(req)
+
+    def checkpoint_request(self, rid: int) -> Optional[EngineRequest]:
+        """Token-ID snapshot of an in-flight request (migration / failure
+        resubmission): frees its slot, returns the portable state."""
+        for i, r in enumerate(self.slots):
+            if r is not None and r.rid == rid:
+                self.slots[i] = None
+                return r
+        for r in self.queue:
+            if r.rid == rid:
+                self.queue.remove(r)
+                return r
+        return None
+
+    def _admit(self):
+        for i in range(self.max_batch):
+            if self.slots[i] is None and self.queue:
+                req = self.queue.pop(0)
+                t0 = time.perf_counter()
+                self._prefill_into_slot(i, req)
+                self.events.append(("prefill", req.prompt_len,
+                                    time.perf_counter() - t0))
+
+    def _prefill_into_slot(self, slot: int, req: EngineRequest):
+        toks = jnp.asarray(req.tokens, jnp.int32)[None]
+        logits, cache1 = prefill(self.params, self.cfg, toks,
+                                 max_len=self.max_len, ctx=self.ctx)
+        # splice the single-request cache into the batch cache at `slot`
+        def splice(batch_leaf, one_leaf):
+            return batch_leaf.at[:, slot].set(one_leaf[:, 0]) \
+                if batch_leaf.ndim >= 2 else batch_leaf
+        for si in range(len(self.cache["stages"])):
+            self.cache["stages"][si] = jax.tree.map(
+                splice, self.cache["stages"][si], cache1["stages"][si])
+        self.cache["pos"] = self.cache["pos"].at[slot].set(
+            int(cache1["pos"][0]))
+        nxt = int(jnp.argmax(logits[0]))
+        req.tokens.append(nxt)
+        self.slots[slot] = req
+
+    def step(self) -> int:
+        """One engine iteration; returns number of active requests."""
+        self._admit()
+        active = [i for i, r in enumerate(self.slots) if r is not None]
+        if not active:
+            return 0
+        toks = np.zeros((self.max_batch, 1), np.int32)
+        for i in active:
+            toks[i, 0] = self.slots[i].tokens[-1]
+        t0 = time.perf_counter()
+        logits, self.cache = self._decode(self.params, self.cache,
+                                          jnp.asarray(toks))
+        self.events.append(("decode", len(active),
+                            time.perf_counter() - t0))
+        nxt = np.asarray(jnp.argmax(logits, axis=-1))
+        for i in active:
+            req = self.slots[i]
+            req.tokens.append(int(nxt[i]))
+            full = len(req.tokens) >= min(
+                req.prompt_len + req.max_new_tokens, self.max_len - 1)
+            if full or (req.eos_id is not None
+                        and int(nxt[i]) == req.eos_id):
+                req.done = True
+                self.completed.append(req)
+                self.slots[i] = None
+        return len(active)
+
+    def run_until_drained(self, max_iters: int = 10000):
+        for _ in range(max_iters):
+            n = self.step()
+            if n == 0 and not self.queue:
+                break
+        return self.completed

@@ -1,0 +1,86 @@
+"""Paged KV-cache manager for the serving engine (vLLM-style, TPU-native
+page size 128 so decode tiles stay MXU/lane aligned)."""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+
+
+@dataclasses.dataclass
+class PagedKVCache:
+    """One layer-group's paged cache + allocator shared across requests."""
+    cfg: ModelConfig
+    num_pages: int
+    page_size: int = 128
+
+    def __post_init__(self):
+        c = self.cfg
+        self.n_attn_layers = sum(
+            1 for b in c.layer_list() if b.mixer in ("full", "window"))
+        shp = (self.n_attn_layers, self.num_pages, self.page_size,
+               c.num_kv_heads, c.head_dim)
+        self.k_pages = jnp.zeros(shp, jnp.bfloat16)
+        self.v_pages = jnp.zeros(shp, jnp.bfloat16)
+        self.free: List[int] = list(range(self.num_pages))
+        self.tables: Dict[int, List[int]] = {}
+        self.lens: Dict[int, int] = {}
+
+    # -- allocator -----------------------------------------------------------
+
+    def pages_needed(self, n_tokens: int) -> int:
+        return -(-n_tokens // self.page_size)
+
+    def can_allocate(self, n_tokens: int) -> bool:
+        return len(self.free) >= self.pages_needed(n_tokens)
+
+    def allocate(self, rid: int, n_tokens: int) -> List[int]:
+        need = self.pages_needed(n_tokens)
+        if len(self.free) < need:
+            raise MemoryError(f"KV cache exhausted ({need} pages needed, "
+                              f"{len(self.free)} free)")
+        pages = [self.free.pop() for _ in range(need)]
+        self.tables[rid] = pages
+        self.lens[rid] = n_tokens
+        return pages
+
+    def extend(self, rid: int, n_new: int = 1):
+        new_len = self.lens[rid] + n_new
+        have = len(self.tables[rid]) * self.page_size
+        while new_len > have:
+            if not self.free:
+                raise MemoryError("KV cache exhausted on extend")
+            self.tables[rid].append(self.free.pop())
+            have += self.page_size
+        self.lens[rid] = new_len
+
+    def release(self, rid: int):
+        self.free.extend(self.tables.pop(rid, []))
+        self.lens.pop(rid, None)
+
+    def utilization(self) -> float:
+        return 1.0 - len(self.free) / self.num_pages
+
+    # -- batched views for the decode kernel ---------------------------------
+
+    def batch_tables(self, rids: List[int]):
+        max_pages = max(len(self.tables[r]) for r in rids)
+        bt = np.zeros((len(rids), max_pages), np.int32)
+        for i, r in enumerate(rids):
+            pages = self.tables[r]
+            bt[i, :len(pages)] = pages
+        lens = np.array([self.lens[r] for r in rids], np.int32)
+        return jnp.asarray(bt), jnp.asarray(lens)
+
+    def write_token(self, rid: int, layer: int, k, v):
+        """Host-driven single-token write (functional update)."""
+        pos = self.lens[rid] - 1
+        page = self.tables[rid][pos // self.page_size]
+        slot = pos % self.page_size
+        self.k_pages = self.k_pages.at[layer, page, slot].set(k)
+        self.v_pages = self.v_pages.at[layer, page, slot].set(v)

@@ -1,0 +1,10 @@
+"""Pallas TPU kernels for the serving hot-spots (DESIGN.md §4):
+
+- flash_attention: causal/windowed prefill attention (GQA)
+- paged_attention: one-token decode over a paged KV cache
+- ssd:             Mamba-2 chunked state-space scan
+
+Each package ships <name>.py (pl.pallas_call + BlockSpec tiling),
+ops.py (jit wrapper choosing interpret mode off-TPU) and ref.py
+(pure-jnp oracle used by the allclose test sweeps).
+"""

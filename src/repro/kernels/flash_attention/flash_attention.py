@@ -1,0 +1,123 @@
+"""Causal / sliding-window GQA flash attention as a Pallas TPU kernel.
+
+Tiling: grid = (batch, q_heads, num_q_blocks, num_k_blocks).  TPU grids
+iterate the trailing dim sequentially per core, so the online-softmax
+state (m, l, acc) lives in VMEM scratch carried across the k-block sweep
+and the output tile is emitted at the final k block.  Block sizes are
+MXU-aligned (128 lanes); fully-future k blocks are skipped with pl.when
+so the causal kernel does ~half the work of the dense one.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *,
+                  bq: int, bk: int, n_k: int, causal: bool,
+                  window: Optional[int], softcap: Optional[float],
+                  q_offset: int, scale: float):
+    qb = pl.program_id(2)
+    kb = pl.program_id(3)
+
+    @pl.when(kb == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    q_start = qb * bq + q_offset          # absolute positions of q rows
+    k_start = kb * bk
+
+    run = jnp.bool_(True)
+    if causal:
+        run &= k_start <= q_start + bq - 1
+    if window is not None:
+        run &= k_start + bk - 1 > q_start - window
+
+    @pl.when(run)
+    def _compute():
+        q = q_ref[0, 0, :, :].astype(jnp.float32)        # [bq, hd]
+        k = k_ref[0, 0, :, :].astype(jnp.float32)        # [bk, hd]
+        v = v_ref[0, 0, :, :].astype(jnp.float32)
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32) * scale
+        if softcap is not None:
+            s = jnp.tanh(s / softcap) * softcap
+        qi = q_start + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0)
+        ki = k_start + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+        mask = jnp.ones((bq, bk), bool)
+        if causal:
+            mask &= ki <= qi
+        if window is not None:
+            mask &= ki > qi - window
+        s = jnp.where(mask, s, NEG_INF)
+
+        m_prev = m_scr[...]                              # [bq, 1]
+        m_cur = jnp.max(s, axis=1, keepdims=True)
+        m_new = jnp.maximum(m_prev, m_cur)
+        p = jnp.exp(s - m_new)
+        alpha = jnp.exp(m_prev - m_new)
+        l_scr[...] = l_scr[...] * alpha + jnp.sum(p, axis=1, keepdims=True)
+        acc_scr[...] = acc_scr[...] * alpha + jax.lax.dot(
+            p, v, preferred_element_type=jnp.float32)
+        m_scr[...] = m_new
+
+    @pl.when(kb == n_k - 1)
+    def _finalize():
+        l = jnp.maximum(l_scr[...], 1e-30)
+        o_ref[0, 0, :, :] = (acc_scr[...] / l).astype(o_ref.dtype)
+
+
+def flash_attention_pallas(q, k, v, *, causal: bool = True,
+                           window: Optional[int] = None,
+                           softcap: Optional[float] = None,
+                           bq: int = 128, bk: int = 128,
+                           interpret: bool = False):
+    """q: [B, Lq, H, hd]; k/v: [B, Lk, KV, hd] -> [B, Lq, H, hd]."""
+    B, Lq, H, hd = q.shape
+    Lk, KV = k.shape[1], k.shape[2]
+    G = H // KV
+    bq = min(bq, Lq)
+    bk = min(bk, Lk)
+    assert Lq % bq == 0 and Lk % bk == 0, (Lq, bq, Lk, bk)
+    n_q, n_k = Lq // bq, Lk // bk
+    q_offset = Lk - Lq  # decode-style alignment (q rows are the tail)
+
+    # layout: [B, H, L, hd], tiles of [1, 1, block, hd]
+    qt = q.transpose(0, 2, 1, 3)
+    kt = k.transpose(0, 2, 1, 3)
+    vt = v.transpose(0, 2, 1, 3)
+
+    kernel = functools.partial(
+        _flash_kernel, bq=bq, bk=bk, n_k=n_k, causal=causal, window=window,
+        softcap=softcap, q_offset=q_offset, scale=hd ** -0.5)
+
+    out = pl.pallas_call(
+        kernel,
+        grid=(B, H, n_q, n_k),
+        in_specs=[
+            pl.BlockSpec((1, 1, bq, hd), lambda b, h, i, j: (b, h, i, 0)),
+            pl.BlockSpec((1, 1, bk, hd),
+                         lambda b, h, i, j, G=G: (b, h // G, j, 0)),
+            pl.BlockSpec((1, 1, bk, hd),
+                         lambda b, h, i, j, G=G: (b, h // G, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, bq, hd),
+                               lambda b, h, i, j: (b, h, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, H, Lq, hd), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bq, 1), jnp.float32),    # running max m
+            pltpu.VMEM((bq, 1), jnp.float32),    # running denom l
+            pltpu.VMEM((bq, hd), jnp.float32),   # output accumulator
+        ],
+        interpret=interpret,
+    )(qt, kt, vt)
+    return out.transpose(0, 2, 1, 3)

@@ -1,0 +1,32 @@
+"""Pure-jnp oracle for causal/windowed GQA flash attention."""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+
+def attention_ref(q, k, v, *, causal: bool = True,
+                  window: Optional[int] = None,
+                  softcap: Optional[float] = None):
+    """q: [B, Lq, H, hd]; k/v: [B, Lk, KV, hd] -> [B, Lq, H, hd]."""
+    B, Lq, H, hd = q.shape
+    Lk, KV = k.shape[1], k.shape[2]
+    G = H // KV
+    qg = q.reshape(B, Lq, KV, G, hd)
+    s = jnp.einsum("bqkgh,bskh->bkgqs", qg.astype(jnp.float32),
+                   k.astype(jnp.float32)) * hd ** -0.5
+    if softcap is not None:
+        s = jnp.tanh(s / softcap) * softcap
+    qi = jnp.arange(Lq)[:, None] + (Lk - Lq)
+    ki = jnp.arange(Lk)[None, :]
+    m = jnp.ones((Lq, Lk), bool)
+    if causal:
+        m &= ki <= qi
+    if window is not None:
+        m &= ki > qi - window
+    s = jnp.where(m[None, None, None], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bkgqs,bskh->bqkgh", p, v.astype(jnp.float32))
+    return o.reshape(B, Lq, H, hd).astype(q.dtype)

@@ -1,0 +1,16 @@
+"""Jit wrapper for paged decode attention (interpret off-TPU)."""
+from __future__ import annotations
+
+import functools
+
+import jax
+
+from repro.kernels.paged_attention.paged_attention import \
+    paged_attention_pallas
+
+
+@jax.jit
+def paged_attention(q, k_pages, v_pages, block_tables, context_lens):
+    return paged_attention_pallas(
+        q, k_pages, v_pages, block_tables, context_lens,
+        interpret=jax.default_backend() != "tpu")

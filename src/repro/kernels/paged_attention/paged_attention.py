@@ -1,0 +1,103 @@
+"""Paged decode attention as a Pallas TPU kernel (vLLM's PagedAttention
+adapted to TPU, DESIGN.md §3/§4).
+
+One query token per sequence attends over a block-table-indexed paged KV
+cache.  Grid = (batch, kv_heads, num_pages); the block table and context
+lengths ride in scalar-prefetch memory (pltpu.PrefetchScalarGridSpec) so
+the page index_map can dereference HBM pages before the tiles stream into
+VMEM.  Online softmax carries (m, l, acc) for the G grouped q heads live
+in VMEM scratch across the page sweep; pages past the context length are
+skipped.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _paged_kernel(bt_ref, ctx_ref, q_ref, k_ref, v_ref, o_ref,
+                  m_scr, l_scr, acc_scr, *, page: int, n_pages: int,
+                  scale: float):
+    b = pl.program_id(0)
+    p = pl.program_id(2)
+
+    @pl.when(p == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    ctx = ctx_ref[b]
+
+    @pl.when(p * page < ctx)
+    def _compute():
+        q = q_ref[0, 0].astype(jnp.float32)              # [G, hd]
+        k = k_ref[0, 0].astype(jnp.float32)              # [page, hd]
+        v = v_ref[0, 0].astype(jnp.float32)
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32) * scale
+        pos = p * page + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+        s = jnp.where(pos < ctx, s, NEG_INF)
+
+        m_prev = m_scr[...]
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=1, keepdims=True))
+        pr = jnp.exp(s - m_new)
+        alpha = jnp.exp(m_prev - m_new)
+        l_scr[...] = l_scr[...] * alpha + jnp.sum(pr, axis=1, keepdims=True)
+        acc_scr[...] = acc_scr[...] * alpha + jax.lax.dot(
+            pr, v, preferred_element_type=jnp.float32)
+        m_scr[...] = m_new
+
+    @pl.when(p == n_pages - 1)
+    def _finalize():
+        l = jnp.maximum(l_scr[...], 1e-30)
+        o_ref[0, 0] = (acc_scr[...] / l).astype(o_ref.dtype)
+
+
+def paged_attention_pallas(q, k_pages, v_pages, block_tables, context_lens,
+                           *, interpret: bool = False):
+    """q: [B, H, hd]; k/v_pages: [P, page, KV, hd];
+    block_tables: [B, n_pages]; context_lens: [B] -> [B, H, hd]."""
+    B, H, hd = q.shape
+    page, KV = k_pages.shape[1], k_pages.shape[2]
+    G = H // KV
+    n_pages = block_tables.shape[1]
+
+    qg = q.reshape(B, KV, G, hd)
+    # pages laid out [KV, P, page, hd] so a tile is one head's page
+    kp = k_pages.transpose(2, 0, 1, 3)
+    vp = v_pages.transpose(2, 0, 1, 3)
+
+    kernel = functools.partial(_paged_kernel, page=page, n_pages=n_pages,
+                               scale=hd ** -0.5)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(B, KV, n_pages),
+        in_specs=[
+            pl.BlockSpec((1, 1, G, hd), lambda b, h, p, bt, ctx: (b, h, 0, 0)),
+            pl.BlockSpec((1, 1, page, hd),
+                         lambda b, h, p, bt, ctx: (h, bt[b, p], 0, 0)),
+            pl.BlockSpec((1, 1, page, hd),
+                         lambda b, h, p, bt, ctx: (h, bt[b, p], 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, G, hd),
+                               lambda b, h, p, bt, ctx: (b, h, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((G, 1), jnp.float32),
+            pltpu.VMEM((G, 1), jnp.float32),
+            pltpu.VMEM((G, hd), jnp.float32),
+        ],
+    )
+    out = pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((B, KV, G, hd), q.dtype),
+        interpret=interpret,
+    )(block_tables, context_lens, qg, kp, vp)
+    return out.reshape(B, H, hd)

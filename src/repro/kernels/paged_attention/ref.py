@@ -1,0 +1,24 @@
+"""Pure-jnp oracle for paged decode attention."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def paged_attention_ref(q, k_pages, v_pages, block_tables, context_lens):
+    """q: [B, H, hd]; k/v_pages: [P, page, KV, hd];
+    block_tables: [B, pages_per_seq]; context_lens: [B] -> [B, H, hd]."""
+    B, H, hd = q.shape
+    page = k_pages.shape[1]
+    KV = k_pages.shape[2]
+    G = H // KV
+    S = block_tables.shape[1] * page
+    k = k_pages[block_tables].reshape(B, S, KV, hd)
+    v = v_pages[block_tables].reshape(B, S, KV, hd)
+    qg = q.reshape(B, KV, G, hd).astype(jnp.float32)
+    s = jnp.einsum("bkgh,bskh->bkgs", qg, k.astype(jnp.float32)) * hd ** -0.5
+    valid = jnp.arange(S)[None] < context_lens[:, None]
+    s = jnp.where(valid[:, None, None], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bkgs,bskh->bkgh", p, v.astype(jnp.float32))
+    return o.reshape(B, H, hd).astype(q.dtype)

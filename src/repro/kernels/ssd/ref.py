@@ -1,0 +1,8 @@
+"""Oracle for the SSD kernel: the chunked pure-jnp scan from the model
+zoo (itself validated token-by-token against the recurrent decode path in
+the per-arch smoke tests)."""
+from repro.models.ssd import ssd_chunked
+
+
+def ssd_ref(x, dt, A, B_, C, chunk: int):
+    return ssd_chunked(x, dt, A, B_, C, chunk)

@@ -1,0 +1,69 @@
+"""Serving launcher: GoodServe proxy in front of real JAX inference
+engines (reduced configs on CPU; the same engines shard full configs on a
+TPU mesh via launch/specs.py).
+
+  PYTHONPATH=src python -m repro.launch.serve --arch llama3.1-8b \
+      --n-requests 12 --engines 2
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import numpy as np
+
+from repro.configs import get_config, reduce_config
+from repro.core.estimator import EMAEstimator
+from repro.engine.engine import EngineRequest, InferenceEngine
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="llama3.1-8b")
+    ap.add_argument("--engines", type=int, default=2)
+    ap.add_argument("--n-requests", type=int, default=12)
+    ap.add_argument("--max-new", type=int, default=12)
+    args = ap.parse_args()
+
+    cfg = reduce_config(get_config(args.arch))
+    engines = [InferenceEngine(cfg, max_batch=4, max_len=96, seed=i)
+               for i in range(args.engines)]
+    est = EMAEstimator()
+    rng = np.random.default_rng(0)
+
+    # submit a batch of requests, routing by EMA-estimated decode rate
+    # (the single-host analogue of the just-enough proxy)
+    for rid in range(args.n_requests):
+        prompt = list(rng.integers(0, cfg.vocab_size, rng.integers(8, 24)))
+        req = EngineRequest(rid=rid, tokens=prompt, prompt_len=len(prompt),
+                            max_new_tokens=args.max_new)
+        gid = min(range(args.engines),
+                  key=lambda i: est.snapshot(i).d
+                  * (1 + len([s for s in engines[i].slots if s])))
+        engines[gid].submit(req)
+
+    t0 = time.time()
+    done = 0
+    while done < args.n_requests:
+        done = 0
+        for gid, eng in enumerate(engines):
+            eng.step()
+            for kind, size, dt in eng.events:
+                if kind == "decode":
+                    est.observe_decode_iter(gid, dt)
+                else:
+                    est.observe_prefill(gid, size, dt)
+            eng.events.clear()
+            done += len(eng.completed)
+    dt = time.time() - t0
+    total_tokens = sum(len(r.generated) for e in engines for r in e.completed)
+    print(f"served {args.n_requests} requests, {total_tokens} tokens "
+          f"in {dt:.1f}s across {args.engines} engines")
+    for gid, eng in enumerate(engines):
+        e = est.snapshot(gid)
+        print(f"  engine{gid}: served={len(eng.completed)} "
+              f"d_ema={e.d * 1e3:.1f}ms/tok p_ema={e.p * 1e6:.0f}us/tok")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,5 @@
+from repro.models.model import (decode_step, init_cache, init_params,
+                                model_forward, prefill)
+
+__all__ = ["decode_step", "init_cache", "init_params", "model_forward",
+           "prefill"]

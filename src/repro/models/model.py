@@ -1,0 +1,331 @@
+"""Model assembly: parameter init, train/prefill forward, one-token decode.
+
+Layer stacks run as ``lax.scan`` over each stage's repeat axis (stage
+pattern unrolled inside the body), so the lowered HLO is pattern-sized
+rather than depth-sized — this is what keeps 512-device dry-run compiles
+of 27B-62L models tractable.  Caches are pytrees whose structure mirrors
+``params["stages"]`` with a leading repeat axis, letting decode scan over
+(params, cache) jointly and emit the updated cache as scan outputs.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.configs.base import BlockSpec, ModelConfig, Stage
+from repro.distributed.context import NULL_CTX, ShardCtx
+from repro.models import layers as L
+from repro.models import ssd
+
+# ---------------------------------------------------------------------------
+# Init
+# ---------------------------------------------------------------------------
+
+def _init_block(key, cfg: ModelConfig, blk: BlockSpec, dtype):
+    kmix, kffn = jax.random.split(key)
+    p = {}
+    if blk.mixer in ("full", "window"):
+        p["attn"] = L.init_attention(kmix, cfg, dtype)
+    elif blk.mixer == "mla":
+        p["attn"] = L.init_mla(kmix, cfg, dtype)
+    elif blk.mixer == "mamba":
+        p["mixer"] = ssd.init_mamba(kmix, cfg, dtype)
+    if blk.ffn == "dense":
+        d_ff = cfg.d_ff
+        p["ffn"] = L.init_ffn(kffn, cfg, dtype, d_ff=d_ff)
+    elif blk.ffn == "moe":
+        p["ffn"] = L.init_moe(kffn, cfg, dtype)
+    return p
+
+
+def padded_vocab(cfg: ModelConfig, multiple: int = 256) -> int:
+    """Pad the embedding table so the vocab dim shards over the model axis
+    (odd released sizes like 151655 / 122753 otherwise force replicated
+    fp32 logits).  Padded ids never appear in data; their logits join the
+    softmax like any other never-sampled token (MaxText-style)."""
+    return -(-cfg.vocab_size // multiple) * multiple
+
+
+def init_params(cfg: ModelConfig, key, dtype=jnp.bfloat16):
+    keys = jax.random.split(key, 4 + len(cfg.stages))
+    V = padded_vocab(cfg)
+    params = {
+        "embed": (jax.random.normal(keys[0], (V, cfg.d_model),
+                                    jnp.float32) * cfg.d_model ** -0.5
+                  ).astype(dtype),
+        "final_norm": jnp.zeros((cfg.d_model,), dtype),
+    }
+    if not cfg.tie_embeddings:
+        params["lm_head"] = (jax.random.normal(
+            keys[1], (cfg.d_model, V), jnp.float32)
+            * cfg.d_model ** -0.5).astype(dtype)
+    if cfg.n_prefix_embeds:
+        params["prefix_proj"] = (jax.random.normal(
+            keys[2], (cfg.d_model, cfg.d_model), jnp.float32)
+            * cfg.d_model ** -0.5).astype(dtype)
+    stages = []
+    for si, stage in enumerate(cfg.stages):
+        skey = jax.random.fold_in(keys[3], si)
+        sp = {}
+        for pi, blk in enumerate(stage.pattern):
+            bkeys = jax.random.split(jax.random.fold_in(skey, pi), stage.repeat)
+            sp[f"blk{pi}"] = jax.vmap(
+                lambda k, blk=blk: _init_block(k, cfg, blk, dtype))(bkeys)
+        stages.append(sp)
+    params["stages"] = stages
+    return params
+
+
+# ---------------------------------------------------------------------------
+# Train / prefill blocks
+# ---------------------------------------------------------------------------
+
+def _apply_block(blk: BlockSpec, p, cfg: ModelConfig, x, positions,
+                 ctx: ShardCtx, collect_cache: bool, max_len: int):
+    """One block, full sequence.  Returns (x, aux, cache_entry|None)."""
+    aux = jnp.float32(0.0)
+    entry = None
+    B, Ltot, _ = x.shape
+    if blk.mixer in ("full", "window"):
+        y, (k, v) = L.attn_forward(p["attn"], cfg, x, positions, blk.window,
+                                   ctx)
+        x = x + y
+        if collect_cache:
+            S = min(blk.window, max_len) if blk.window else max_len
+            k_c, v_c = _to_ring(k, S), _to_ring(v, S)
+            entry = {"k": k_c, "v": v_c}
+    elif blk.mixer == "mla":
+        y, (ckv, kr) = L.mla_forward(p["attn"], cfg, x, positions, ctx)
+        x = x + y
+        if collect_cache:
+            entry = {"ckv": _to_ring(ckv, max_len), "kr": _to_ring(kr, max_len)}
+    elif blk.mixer == "mamba":
+        if collect_cache:
+            y, (conv_tail, state) = ssd.mamba_forward(
+                p["mixer"], cfg, x, ctx, return_state=True)
+            entry = {"conv": conv_tail, "ssm": state}
+        else:
+            y = ssd.mamba_forward(p["mixer"], cfg, x, ctx)
+        x = x + y
+    if blk.ffn == "dense":
+        x = x + L.ffn_forward(p["ffn"], cfg, x, ctx)
+    elif blk.ffn == "moe":
+        y, a = L.moe_forward(p["ffn"], cfg, x, ctx)
+        x = x + y
+        aux = aux + a
+    bspec = ctx.batch_spec_entry(B)
+    x = ctx.constraint(x, bspec, ctx.seq_entry(Ltot), None)
+    return x, aux, entry
+
+
+def _to_ring(k, S: int):
+    """Place the last min(L, S) timesteps of k [B, L, ...] into a ring
+    buffer of size S at slots (t % S), zero elsewhere."""
+    B, Lt = k.shape[0], k.shape[1]
+    take = min(Lt, S)
+    tail = k[:, Lt - take:]
+    slots = (jnp.arange(Lt - take, Lt)) % S
+    buf = jnp.zeros((B, S) + k.shape[2:], k.dtype)
+    return buf.at[:, slots].set(tail)
+
+
+def _run_stages(params, cfg: ModelConfig, x, positions, ctx: ShardCtx,
+                remat: bool, collect_cache: bool, max_len: int):
+    aux_total = jnp.float32(0.0)
+    caches = []
+    for si, stage in enumerate(cfg.stages):
+        sp = params["stages"][si]
+        multi = len(stage.pattern) > 1
+
+        def body(carry, layer_p, stage=stage, multi=multi):
+            xx, aux = carry
+            entries = {}
+            for pi, blk in enumerate(stage.pattern):
+                apply = _apply_block
+                if remat and multi:
+                    # nested remat: the backward re-derives one block at a
+                    # time, so a long pattern (jamba's 8, gemma3's 6)
+                    # doesn't hold every block's attention/SSD temporaries
+                    # live at once
+                    apply = jax.checkpoint(
+                        _apply_block,
+                        static_argnums=(0, 2, 5, 6, 7),  # blk/cfg/ctx/flags
+                        prevent_cse=False)
+                xx, a, entry = apply(
+                    blk, layer_p[f"blk{pi}"], cfg, xx, positions, ctx,
+                    collect_cache, max_len)
+                aux = aux + a
+                if entry is not None:
+                    entries[f"blk{pi}"] = entry
+            return (xx, aux), entries
+
+        if remat:
+            body = jax.checkpoint(body, prevent_cse=False)
+        (x, aux_total), stage_cache = lax.scan(body, (x, aux_total), sp)
+        caches.append(stage_cache)
+    return x, aux_total, caches
+
+
+# ---------------------------------------------------------------------------
+# Public entry points
+# ---------------------------------------------------------------------------
+
+def embed_tokens(params, cfg: ModelConfig, tokens, prefix_embeds,
+                 ctx: ShardCtx):
+    x = jnp.take(params["embed"], tokens, axis=0)
+    if cfg.n_prefix_embeds and prefix_embeds is not None:
+        pre = prefix_embeds.astype(x.dtype) @ params["prefix_proj"]
+        x = jnp.concatenate([pre, x], axis=1)
+    bspec = ctx.batch_spec_entry(x.shape[0])
+    return ctx.constraint(x, bspec, ctx.seq_entry(x.shape[1]), None)
+
+
+def model_forward(params, cfg: ModelConfig, tokens, prefix_embeds=None,
+                  ctx: ShardCtx = NULL_CTX, remat: bool = True):
+    """Teacher-forcing forward.  Returns (final_hidden [B,S,d], aux_loss)."""
+    x = embed_tokens(params, cfg, tokens, prefix_embeds, ctx)
+    B, S, _ = x.shape
+    positions = jnp.broadcast_to(jnp.arange(S)[None], (B, S))
+    x, aux, _ = _run_stages(params, cfg, x, positions, ctx, remat,
+                            collect_cache=False, max_len=S)
+    x = L.rms_norm(x, params["final_norm"], cfg.norm_eps)
+    return x, aux
+
+
+def lm_head_weight(params, cfg: ModelConfig):
+    if cfg.tie_embeddings:
+        return params["embed"].T
+    return params["lm_head"]
+
+
+def logits_fn(params, cfg: ModelConfig, hidden):
+    w = lm_head_weight(params, cfg)
+    return hidden @ w
+
+
+def prefill(params, cfg: ModelConfig, tokens, max_len: int,
+            prefix_embeds=None, ctx: ShardCtx = NULL_CTX,
+            remat: bool = False):
+    """Process a prompt, build the KV/state cache sized ``max_len``.
+
+    Returns (last_token_logits [B, V], cache).  ``cache["pos"]`` holds the
+    per-request next position.
+    """
+    x = embed_tokens(params, cfg, tokens, prefix_embeds, ctx)
+    B, S, _ = x.shape
+    positions = jnp.broadcast_to(jnp.arange(S)[None], (B, S))
+    x, _, caches = _run_stages(params, cfg, x, positions, ctx, remat,
+                               collect_cache=True, max_len=max_len)
+    x = L.rms_norm(x, params["final_norm"], cfg.norm_eps)
+    logits = logits_fn(params, cfg, x[:, -1])
+    cache = {"stages": caches, "pos": jnp.full((B,), S, jnp.int32)}
+    return logits, cache
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int,
+               dtype=jnp.bfloat16):
+    """Empty cache (decode-from-scratch or dry-run ShapeDtypeStruct base)."""
+    def blk_cache(blk: BlockSpec):
+        if blk.mixer in ("full", "window"):
+            S = min(blk.window, max_len) if blk.window else max_len
+            shp = (batch, S, cfg.num_kv_heads, cfg.head_dim)
+            return {"k": jnp.zeros(shp, dtype), "v": jnp.zeros(shp, dtype)}
+        if blk.mixer == "mla":
+            m = cfg.mla
+            return {"ckv": jnp.zeros((batch, max_len, m.kv_lora_rank), dtype),
+                    "kr": jnp.zeros((batch, max_len, m.rope_head_dim), dtype)}
+        if blk.mixer == "mamba":
+            s = cfg.ssm
+            di = s.d_inner(cfg.d_model)
+            gn = s.n_groups * s.d_state
+            K1 = s.d_conv - 1
+            return {"conv": {"x": jnp.zeros((batch, K1, di), dtype),
+                             "B": jnp.zeros((batch, K1, gn), dtype),
+                             "C": jnp.zeros((batch, K1, gn), dtype)},
+                    "ssm": jnp.zeros((batch, s.n_heads(cfg.d_model),
+                                      s.head_dim, s.d_state), jnp.float32)}
+        return None
+
+    stages = []
+    for stage in cfg.stages:
+        sc = {}
+        for pi, blk in enumerate(stage.pattern):
+            e = blk_cache(blk)
+            if e is not None:
+                sc[f"blk{pi}"] = jax.tree.map(
+                    lambda a: jnp.broadcast_to(
+                        a[None], (stage.repeat,) + a.shape).copy(), e)
+        stages.append(sc)
+    return {"stages": stages, "pos": jnp.zeros((batch,), jnp.int32)}
+
+
+def decode_step(params, cfg: ModelConfig, cache, tokens,
+                ctx: ShardCtx = NULL_CTX):
+    """One decode iteration.  tokens: [B, 1] int32.  Returns
+    (logits [B, V], new_cache)."""
+    pos = cache["pos"]
+    x = jnp.take(params["embed"], tokens, axis=0)
+    B = x.shape[0]
+    bspec = ctx.batch_spec_entry(B)
+    x = ctx.constraint(x, bspec, None, None)
+
+    new_stage_caches = []
+    for si, stage in enumerate(cfg.stages):
+        sp = params["stages"][si]
+        sc = cache["stages"][si]
+
+        # the cache rides the scan CARRY and is updated in place at the
+        # layer index — XLA aliases while-loop carries, so decode keeps a
+        # single cache buffer instead of stacked xs/ys copies (which cost
+        # +2x cache per k/v at 32k contexts)
+        def body(carry, inp, stage=stage):
+            xx, cache_full = carry
+            i, layer_p = inp
+            layer_c = jax.tree.map(
+                lambda a: lax.dynamic_index_in_dim(a, i, 0, keepdims=False),
+                cache_full)
+            new_c = {}
+            for pi, blk in enumerate(stage.pattern):
+                p_ = layer_p[f"blk{pi}"]
+                if blk.mixer in ("full", "window"):
+                    c_ = layer_c[f"blk{pi}"]
+                    y, (ck, cv) = L.attn_decode(
+                        p_["attn"], cfg, xx, c_["k"], c_["v"], pos,
+                        blk.window, ctx)
+                    xx = xx + y
+                    new_c[f"blk{pi}"] = {"k": ck, "v": cv}
+                elif blk.mixer == "mla":
+                    c_ = layer_c[f"blk{pi}"]
+                    y, (cc, kr) = L.mla_decode(
+                        p_["attn"], cfg, xx, c_["ckv"], c_["kr"], pos, ctx)
+                    xx = xx + y
+                    new_c[f"blk{pi}"] = {"ckv": cc, "kr": kr}
+                elif blk.mixer == "mamba":
+                    c_ = layer_c[f"blk{pi}"]
+                    y, (conv_s, ssm_s) = ssd.mamba_decode(
+                        p_["mixer"], cfg, xx, c_["conv"], c_["ssm"], ctx)
+                    xx = xx + y
+                    new_c[f"blk{pi}"] = {"conv": conv_s, "ssm": ssm_s}
+                if blk.ffn == "dense":
+                    xx = xx + L.ffn_forward(p_["ffn"], cfg, xx, ctx)
+                elif blk.ffn == "moe":
+                    y, _ = L.moe_forward(p_["ffn"], cfg, xx, ctx)
+                    xx = xx + y
+            xx = ctx.constraint(xx, bspec, None, None)
+            cache_full = jax.tree.map(
+                lambda a, nc: lax.dynamic_update_index_in_dim(a, nc, i, 0),
+                cache_full, new_c)
+            return (xx, cache_full), None
+
+        idx = jnp.arange(stage.repeat)
+        (x, new_sc), _ = lax.scan(body, (x, sc), (idx, sp))
+        new_stage_caches.append(new_sc)
+
+    x = L.rms_norm(x, params["final_norm"], cfg.norm_eps)
+    logits = logits_fn(params, cfg, x[:, 0])
+    new_cache = {"stages": new_stage_caches, "pos": pos + 1}
+    return logits, new_cache

@@ -1,0 +1,6 @@
+import os
+import sys
+
+# Smoke tests must see exactly 1 CPU device (the dry-run sets its own
+# XLA_FLAGS before any jax import — never here).
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))

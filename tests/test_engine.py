@@ -1,0 +1,90 @@
+"""Serving-engine tests: continuous batching, paged KV allocator,
+token-ID request checkpointing (migration/FT), greedy decode equivalence.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config, reduce_config
+from repro.engine.engine import EngineRequest, InferenceEngine
+from repro.engine.kv_cache import PagedKVCache
+from repro.models import init_params, model_forward
+from repro.models.model import logits_fn
+
+KEY = jax.random.PRNGKey(0)
+
+
+@pytest.fixture(scope="module")
+def engine():
+    cfg = reduce_config(get_config("llama3.1-8b"))
+    return InferenceEngine(cfg, max_batch=3, max_len=64)
+
+
+def test_engine_serves_batched_requests(engine):
+    reqs = [EngineRequest(rid=i, tokens=list(range(5 + i, 13 + i)),
+                          prompt_len=8 + 0 * i, max_new_tokens=6)
+            for i in range(5)]
+    for r in reqs:
+        r.prompt_len = len(r.tokens)
+        engine.submit(r)
+    done = engine.run_until_drained()
+    assert len(done) == 5
+    for r in done:
+        assert len(r.generated) >= 1
+
+
+def test_engine_matches_teacher_forcing():
+    cfg = reduce_config(get_config("llama3.1-8b"))
+    eng = InferenceEngine(cfg, max_batch=2, max_len=48, seed=3)
+    prompt = list(np.random.default_rng(0).integers(0, cfg.vocab_size, 10))
+    r = EngineRequest(rid=0, tokens=list(prompt), prompt_len=len(prompt),
+                      max_new_tokens=5)
+    eng.submit(r)
+    eng.run_until_drained()
+    # greedy reference: argmax continuation under teacher forcing
+    toks = list(prompt)
+    for _ in range(len(r.generated)):
+        h, _ = model_forward(eng.params, cfg,
+                             jnp.asarray(toks, jnp.int32)[None],
+                             remat=False)
+        lg = logits_fn(eng.params, cfg, h[:, -1])
+        toks.append(int(jnp.argmax(lg[0])))
+    assert toks[len(prompt):] == r.generated
+
+
+def test_token_id_checkpoint_roundtrip(engine):
+    r = EngineRequest(rid=99, tokens=list(range(10)), prompt_len=10,
+                      max_new_tokens=20)
+    engine.submit(r)
+    engine.step()
+    snap = engine.checkpoint_request(99)
+    assert snap is not None
+    assert snap.tokens[:10] == list(range(10))
+    # resubmit elsewhere: progress (generated tokens) is preserved
+    assert len(snap.tokens) >= 10
+
+
+def test_paged_cache_allocator():
+    cfg = reduce_config(get_config("llama3.1-8b"))
+    cache = PagedKVCache(cfg, num_pages=16, page_size=8)
+    cache.allocate(1, 20)             # 3 pages
+    cache.allocate(2, 8)              # 1 page
+    assert cache.utilization() == pytest.approx(4 / 16)
+    cache.extend(1, 5)                # 25 tokens -> 4 pages
+    assert len(cache.tables[1]) == 4
+    bt, lens = cache.batch_tables([1, 2])
+    assert bt.shape == (2, 4)
+    assert list(np.asarray(lens)) == [25, 8]
+    cache.release(1)
+    assert cache.utilization() == pytest.approx(1 / 16)
+    with pytest.raises(MemoryError):
+        cache.allocate(3, 16 * 8 + 1)
+
+
+def test_paged_cache_exhaustion_on_extend():
+    cfg = reduce_config(get_config("llama3.1-8b"))
+    cache = PagedKVCache(cfg, num_pages=2, page_size=8)
+    cache.allocate(1, 16)
+    with pytest.raises(MemoryError):
+        cache.extend(1, 1)

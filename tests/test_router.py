@@ -1,0 +1,151 @@
+"""Property tests (hypothesis) on the just-enough selection invariants
+and the estimator, plus unit tests of every baseline router."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.cluster import hardware as hwlib
+from repro.cluster.simulator import (Cluster, Instance, SimRequest,
+                                     Simulator, build_paper_cluster)
+from repro.cluster.workload import Request, sample_request
+from repro.core.estimator import EMAEstimator
+from repro.core.router import (ALL_BASELINES, GoodServeRouter, OracleRouter,
+                               make_router)
+
+
+class ConstPredictor:
+    def __init__(self, v):
+        self.v = v
+
+    def predict(self, prompts, input_lens, generated=None):
+        return np.full(len(prompts), self.v, np.float32)
+
+
+def _mini_cluster(n=4, model="llama3.1-8b"):
+    fp = hwlib.footprint(model)
+    names = list(hwlib.GPUS)[:n]
+    return Cluster([Instance(i, hwlib.GPUS[names[i % len(names)]], fp)
+                    for i in range(n)])
+
+
+def _router_with_cluster(pred_v=200.0, d_values=(0.01, 0.02, 0.04, 0.08)):
+    cluster = _mini_cluster(len(d_values))
+    router = GoodServeRouter(ConstPredictor(pred_v))
+    req = sample_request(np.random.default_rng(0), 0)
+    req.slo = 1e9
+    sr = SimRequest(req=req)
+    sim = Simulator(cluster, router, [req])
+    for i, d in enumerate(d_values):
+        e = cluster.estimator._get(i)
+        e.d, e.p, e.q, e.n_obs = d, 1e-5, 0.0, 10
+    return router, cluster, sr
+
+
+# ---- Algorithm 1 invariants -------------------------------------------------
+
+@settings(max_examples=60, deadline=None)
+@given(ds=st.lists(st.floats(1e-4, 0.3), min_size=2, max_size=8),
+       pred=st.floats(1.0, 2000.0),
+       slo=st.floats(0.5, 500.0))
+def test_just_enough_picks_slowest_feasible(ds, pred, slo):
+    router, cluster, sr = _router_with_cluster(pred, tuple(ds))
+    sr.req.slo = slo
+    gid = router._route(sr, t=0.0)
+    est = cluster.estimator
+    T = np.array([est.expected_latency(i, sr.req.input_len, pred)
+                  for i in range(len(ds))])
+    feasible = np.nonzero(T <= router.margin * slo)[0]
+    if feasible.size:
+        # selected must be feasible and have max d among feasible
+        assert gid in feasible
+        d = np.array(ds)
+        assert d[gid] == pytest.approx(max(d[feasible]))
+    else:
+        # fallback: minimum violation
+        assert T[gid] == pytest.approx(T.min())
+
+
+@settings(max_examples=30, deadline=None)
+@given(slo=st.floats(0.01, 0.2))
+def test_infeasible_falls_back_to_most_capable(slo):
+    """With an SLO nobody can meet, Alg. 1 line 15 picks argmin(T - D)."""
+    router, cluster, sr = _router_with_cluster(5000.0)
+    sr.req.slo = slo
+    gid = router._route(sr, t=0.0)
+    est = cluster.estimator
+    T = [est.expected_latency(i, sr.req.input_len, 5000.0) for i in range(4)]
+    assert T[gid] == pytest.approx(min(T))
+
+
+def test_cold_start_explores_all_instances():
+    cluster = _mini_cluster(4)
+    router = GoodServeRouter(ConstPredictor(100.0))
+    reqs = [sample_request(np.random.default_rng(i), i) for i in range(8)]
+    sim = Simulator(cluster, router, reqs)
+    seen = set()
+    for i, r in enumerate(reqs):
+        seen.add(router._route(SimRequest(req=r), t=0.0))
+    assert seen == {0, 1, 2, 3}
+
+
+# ---- EMA estimator ----------------------------------------------------------
+
+@settings(max_examples=40, deadline=None)
+@given(obs=st.lists(st.floats(1e-4, 1.0), min_size=2, max_size=30))
+def test_ema_stays_within_observed_range(obs):
+    est = EMAEstimator(alpha=0.3)
+    for o in obs:
+        est.observe_decode_iter(0, o)
+    d = est.snapshot(0).d
+    assert min(min(obs), 0.03) - 1e-9 <= d <= max(max(obs), 0.03) + 1e-9
+
+
+def test_ema_converges_to_constant_signal():
+    est = EMAEstimator(alpha=0.3)
+    for _ in range(60):
+        est.observe_decode_iter(0, 0.123)
+    assert abs(est.snapshot(0).d - 0.123) < 1e-6
+
+
+def test_expected_latency_formula():
+    """T(r,g) = q + p (L_in - H) + d L_out  (paper Eq. 2)."""
+    est = EMAEstimator()
+    e = est._get(0)
+    e.q, e.p, e.d = 1.0, 0.01, 0.05
+    assert est.expected_latency(0, 100, 200, prefix_hit=40) == \
+        pytest.approx(1.0 + 0.01 * 60 + 0.05 * 200)
+
+
+# ---- baselines behave per spec ---------------------------------------------
+
+def test_all_baselines_route_valid_ids():
+    for cls in ALL_BASELINES:
+        cluster = _mini_cluster(4)
+        router = cls()
+        reqs = [sample_request(np.random.default_rng(i), i)
+                for i in range(6)]
+        sim = Simulator(cluster, router, reqs)
+        for r in reqs:
+            gid = router.route(SimRequest(req=r), 0.0)
+            assert 0 <= gid < 4
+
+
+def test_round_robin_cycles():
+    cluster = _mini_cluster(4)
+    router = make_router("round_robin")
+    reqs = [sample_request(np.random.default_rng(i), i) for i in range(8)]
+    sim = Simulator(cluster, router, reqs)
+    ids = [router.route(SimRequest(req=r), 0.0) for r in reqs]
+    assert ids[:4] == ids[4:]
+    assert sorted(ids[:4]) == [0, 1, 2, 3]
+
+
+def test_least_request_prefers_empty():
+    cluster = _mini_cluster(3)
+    router = make_router("least_request")
+    reqs = [sample_request(np.random.default_rng(i), i) for i in range(3)]
+    sim = Simulator(cluster, router, reqs)
+    sr = SimRequest(req=reqs[0])
+    cluster.instances[0].queue.append(sr)
+    cluster.instances[1].queue.append(sr)
+    assert router.route(SimRequest(req=reqs[1]), 0.0) == 2

@@ -1,0 +1,91 @@
+"""Cluster-simulator invariants: conservation, completion, chunked
+prefill, prefix caching, migration semantics, failure recovery."""
+import numpy as np
+import pytest
+
+from repro.cluster.simulator import Simulator, build_paper_cluster
+from repro.cluster.workload import make_workload
+from repro.core.metrics import summarize
+from repro.core.router import GoodServeRouter, make_router
+
+
+class ConstPredictor:
+    def predict(self, prompts, input_lens, generated=None):
+        return np.full(len(prompts), 150.0, np.float32)
+
+
+def _run(router_name="least_request", n=60, fail_at=None, tau=50, **kw):
+    reqs = make_workload(n=n, rps=20.0, slo_scale=2.0, seed=5, **kw)
+    cluster = build_paper_cluster()
+    router = make_router(router_name,
+                         predictor=ConstPredictor()
+                         if router_name == "goodserve" else None)
+    sim = Simulator(cluster, router, reqs, tau=tau, fail_at=fail_at)
+    out, dur = sim.run()
+    return out, dur, sim
+
+
+def test_all_requests_complete_exactly_once():
+    out, dur, _ = _run()
+    assert all(sr.state == "done" for sr in out)
+    assert all(sr.tokens_out == sr.req.output_len for sr in out)
+    assert all(sr.finished_at is not None and
+               sr.finished_at >= sr.req.arrival for sr in out)
+
+
+def test_journeys_are_causal():
+    out, _, _ = _run("goodserve")
+    for sr in out:
+        times = [t for (t, _, _) in sr.journey]
+        assert times == sorted(times)
+        assert sr.journey[-1][1] == "done"
+
+
+def test_goodput_metrics_consistent():
+    out, dur, _ = _run()
+    s = summarize(out, dur)
+    assert 0 <= s["violation_ratio"] <= 1
+    assert s["goodput_rps"] * dur == pytest.approx(
+        (1 - s["violation_ratio"]) * s["n"], abs=1e-6)
+
+
+def test_failure_injection_recovers_all_requests():
+    """Killing an instance mid-run must lose no requests: the router
+    resubmits from token IDs (the paper's migration = our FT path)."""
+    out, dur, sim = _run("goodserve", n=80, fail_at={0: 2.0})
+    assert all(sr.state == "done" for sr in out)
+    assert not sim.cluster.instances[0].alive
+    # nothing finished on the dead instance after the failure
+    for sr in out:
+        for (t, ev, gid) in sr.journey:
+            if ev == "done" and gid == 0:
+                assert t <= 2.0 + 1e-6
+
+
+def test_migration_preserves_progress_token_id():
+    out, _, sim = _run("goodserve", n=120, tau=25)
+    migrated = [sr for sr in out if sr.n_migrations > 0]
+    for sr in migrated:
+        assert sr.tokens_out == sr.req.output_len
+        # re-prefill happened at the target: journey has >= 2 'run' events
+        runs = [e for e in sr.journey if e[1] == "run"]
+        assert len(runs) >= 2
+
+
+def test_prefix_cache_hits_bounded_by_input():
+    out, _, sim = _run("prefix_cache")
+    for g in sim.cluster.instances:
+        for req in [sr.req for sr in out]:
+            assert 0 <= g.prefix_hit(req) <= req.input_len
+
+
+def test_chunked_prefill_progress_monotonic():
+    out, _, _ = _run(n=30)
+    for sr in out:
+        assert sr.prefill_end is not None
+        assert sr.prefill_end >= sr.enqueued_at
+
+
+def test_tpm_counter_positive_after_serving():
+    out, dur, sim = _run(n=30)
+    assert any(g._tpm_tokens > 0 for g in sim.cluster.instances)

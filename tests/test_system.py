@@ -1,0 +1,67 @@
+"""End-to-end behaviour tests for the paper's system (deliverable c):
+the GoodServe claims, on the Fig. 2 testbed configuration."""
+import numpy as np
+import pytest
+
+from repro.cluster.simulator import Simulator, build_paper_cluster
+from repro.cluster.workload import Request
+from repro.core.metrics import summarize
+from repro.core.router import make_router
+
+
+class MeanPredictor:
+    def predict(self, prompts, input_lens, generated=None):
+        return np.full(len(prompts), 300.0, np.float32)
+
+
+def fig2_workload(n=300, rps=10.0, slo=6.0, seed=0):
+    rng = np.random.default_rng(seed)
+    arr = np.cumsum(rng.exponential(1.0 / rps, size=n))
+    return [Request(rid=i, family="sql", prompt="q " * 100, input_len=100,
+                    output_len=int(rng.integers(100, 501)),
+                    arrival=float(arr[i]), slo=slo,
+                    prefix_group=int(rng.integers(0, 32)))
+            for i in range(n)]
+
+
+def _run(name, n=300, seed=0):
+    reqs = fig2_workload(n=n, seed=seed)
+    cluster = build_paper_cluster()
+    router = make_router(
+        name, predictor=MeanPredictor() if name == "goodserve" else None)
+    sim = Simulator(cluster, router, reqs, tau=50)
+    out, dur = sim.run()
+    return summarize(out, dur)
+
+
+@pytest.fixture(scope="module")
+def results():
+    names = ["random", "round_robin", "least_request", "lowest_tpm",
+             "prefix_cache", "preble", "llumnix", "goodserve", "oracle"]
+    return {n: _run(n) for n in names}
+
+
+def test_goodserve_beats_every_baseline(results):
+    """The paper's headline: GoodServe > all SLO-unaware routers."""
+    gs = results["goodserve"]["goodput_rps"]
+    for name, s in results.items():
+        if name in ("goodserve", "oracle"):
+            continue
+        assert gs > s["goodput_rps"], (name, s, gs)
+
+
+def test_goodserve_close_to_oracle(results):
+    """Predict-and-rectify should recover most of the oracle gap."""
+    gs = results["goodserve"]["goodput_rps"]
+    oracle = results["oracle"]["goodput_rps"]
+    assert gs >= 0.75 * oracle
+
+
+def test_goodserve_violation_ratio_low(results):
+    assert results["goodserve"]["violation_ratio"] < 0.25
+    assert results["oracle"]["violation_ratio"] < 0.2
+
+
+def test_all_routers_complete_all_requests(results):
+    for s in results.values():
+        assert s["n_finished"] == s["n"]
