@@ -21,7 +21,7 @@ def main() -> None:
     from benchmarks import (fig1_iteration_latency, fig2_motivation,
                             fig6_end_to_end, fig7_ablation, fig8_predictor,
                             fig9_migration, fig10_sensitivity,
-                            fig11_overhead, roofline)
+                            fig11_overhead, fig12_workflows, roofline)
 
     n_sim = 200 if args.fast else 400
     n_fig2 = 300 if args.fast else 600
@@ -39,6 +39,9 @@ def main() -> None:
         "fig10": lambda: fig10_sensitivity.run(n=min(n_sim, 300),
                                                epochs=max(epochs - 10, 8)),
         "fig11": lambda: fig11_overhead.run(),
+        # fig12's sim is cheap (~40s); at n=40 the workflow sample is too
+        # small for stable router ordering, so fast mode keeps n=60
+        "fig12": lambda: fig12_workflows.run(),
         "roofline": lambda: roofline.run(),
     }
     only = [s for s in args.only.split(",") if s]

@@ -13,6 +13,11 @@ The simulator also supports:
   * token-ID / KV-cache migration with explicit network cost (Fig. 9),
   * instance failure injection (token-ID resubmission doubles as the
     fault-tolerance path — DESIGN.md §6),
+  * multi-step agentic workflows: a DAG step only *materializes* (its
+    arrival event fires) once every parent step has completed, and each
+    instance keeps a per-session KV/prefix cache so consecutive steps of
+    a session routed to the same instance skip re-prefilling the shared
+    conversation context,
   * deterministic seeds for reproducibility.
 """
 from __future__ import annotations
@@ -26,7 +31,7 @@ from typing import Callable, Dict, List, Optional, Sequence, Tuple
 import numpy as np
 
 from repro.cluster import hardware as hwlib
-from repro.cluster.workload import Request
+from repro.cluster.workload import Request, Workflow
 from repro.core.estimator import EMAEstimator
 from repro.core import migration as miglib
 
@@ -57,6 +62,10 @@ class SimRequest:
 
     @property
     def deadline(self) -> float:
+        # workflow steps share one absolute per-workflow deadline;
+        # standalone requests keep the per-request arrival + SLO
+        if self.req.deadline_t is not None:
+            return self.req.deadline_t
         return self.req.arrival + self.req.slo
 
 
@@ -66,7 +75,8 @@ def group_prefix_len(group: int) -> int:
 
 class Instance:
     def __init__(self, iid: int, hw: hwlib.HardwareSpec,
-                 fp: hwlib.ModelFootprint, prefix_capacity: int = 8):
+                 fp: hwlib.ModelFootprint, prefix_capacity: int = 8,
+                 session_capacity: int = 16):
         self.iid = iid
         self.hw = hw
         self.fp = fp
@@ -76,6 +86,10 @@ class Instance:
         self.busy = False
         self.prefix_cache: OrderedDict = OrderedDict()
         self.prefix_capacity = prefix_capacity
+        # per-session KV retention: session id -> cached context length.
+        # A later step of the same session skips prefilling that prefix.
+        self.session_cache: OrderedDict = OrderedDict()
+        self.session_capacity = session_capacity
         self._tpm_tokens = 0.0
         self._tpm_t0 = 0.0
         # effective-TPOT tracking: time between decode-iteration *ends*
@@ -110,9 +124,23 @@ class Instance:
         return min(used / max(cap, 1.0), 1.0)
 
     def prefix_hit(self, req: Request) -> int:
+        hit = 0
         g = req.prefix_group
         if g in self.prefix_cache:
-            return min(group_prefix_len(g), req.input_len)
+            hit = min(group_prefix_len(g), req.input_len)
+        return max(hit, self.session_hit(req))
+
+    def session_hit(self, req: Request) -> int:
+        """Cached conversation prefix for this request's session.  Only
+        contexts of the step's first-parent ancestor chain are contiguous
+        prefixes of its prompt — a fanout sibling's context lives in the
+        same session but is NOT a prefix, so it earns no credit."""
+        if req.session < 0 or req.session not in self.session_cache:
+            return 0
+        cached = self.session_cache[req.session]   # step -> context_len
+        for ancestor in req.prefix_chain:          # nearest first
+            if ancestor in cached:
+                return min(cached[ancestor], req.input_len)
         return 0
 
     def note_prefix(self, req: Request):
@@ -121,6 +149,15 @@ class Instance:
         self.prefix_cache.move_to_end(g)
         while len(self.prefix_cache) > self.prefix_capacity:
             self.prefix_cache.popitem(last=False)
+
+    def note_session(self, req: Request, context_len: int):
+        if req.session < 0:
+            return
+        cached = self.session_cache.setdefault(req.session, {})
+        cached[req.step] = max(cached.get(req.step, 0), context_len)
+        self.session_cache.move_to_end(req.session)
+        while len(self.session_cache) > self.session_capacity:
+            self.session_cache.popitem(last=False)
 
     def can_admit(self, sr: SimRequest) -> bool:
         cap = hwlib.max_batch(self.hw, self.fp,
@@ -146,7 +183,8 @@ class Simulator:
     def __init__(self, cluster: Cluster, router, requests: Sequence[Request],
                  *, tau: int = 50, migration_mode: str = "token_id",
                  fail_at: Optional[Dict[int, float]] = None,
-                 max_time: float = 86400.0):
+                 max_time: float = 86400.0,
+                 workflows: Optional[Sequence[Workflow]] = None):
         self.cluster = cluster
         self.router = router
         self.requests = [SimRequest(req=r) for r in requests]
@@ -158,6 +196,18 @@ class Simulator:
         self._seq = itertools.count()
         self.now = 0.0
         self.migration_log: List[Tuple[float, int, int, float]] = []
+        # DAG bookkeeping: a step materializes only when its parents have
+        # completed (deferred arrival).  Structure comes from the requests
+        # themselves; ``workflows`` adds descriptors for metrics.
+        self.workflows = {w.wid: w for w in (workflows or [])}
+        self._wf_children: Dict[Tuple[int, int], List[SimRequest]] = {}
+        self._wf_waiting: Dict[Tuple[int, int], int] = {}
+        for sr in self.requests:
+            r = sr.req
+            if r.wid >= 0 and r.parents:
+                self._wf_waiting[(r.wid, r.step)] = len(r.parents)
+                for p in r.parents:
+                    self._wf_children.setdefault((r.wid, p), []).append(sr)
         router.attach(self)
 
     # -- event plumbing -----------------------------------------------------
@@ -305,6 +355,9 @@ class Simulator:
                 sr.state = "done"
                 sr.finished_at = t_next
                 sr.journey.append((round(t_next, 2), "done", gid))
+                g.note_session(sr.req, sr.context_len)
+                self.router.on_request_done(sr, t_next)
+                self._release_children(sr, t_next)
             for sr in at_risk:
                 self.router.on_risk_check(sr, t_next)
 
@@ -313,6 +366,17 @@ class Simulator:
         else:
             g.busy = False
             g._idle_gap = True
+
+    def _release_children(self, sr: SimRequest, t: float):
+        """Deferred DAG arrivals: a child step materializes when its last
+        unfinished parent completes; its arrival timestamp becomes the
+        release time (the per-workflow deadline stays absolute)."""
+        for child in self._wf_children.get((sr.req.wid, sr.req.step), []):
+            key = (child.req.wid, child.req.step)
+            self._wf_waiting[key] -= 1
+            if self._wf_waiting[key] == 0:
+                child.req.arrival = t
+                self._push(t, "arrival", child)
 
     def _fail_instance(self, gid: int, t: float):
         g = self.cluster.instances[gid]
@@ -330,6 +394,8 @@ class Simulator:
 
     def run(self):
         for sr in self.requests:
+            if sr.req.wid >= 0 and sr.req.parents:
+                continue                      # deferred until parents finish
             self._push(sr.req.arrival, "arrival", sr)
         for gid, t in self.fail_at.items():
             self._push(t, "fail", gid)

@@ -11,11 +11,31 @@ correlates with prompt complexity markers) plus irreducible noise.
 
 SLOs follow the paper's methodology: median solo execution time on the
 mid-tier GPU (A800), scaled by a relaxation factor.
+
+Agentic multi-step workflows (the paper's core scenario)
+--------------------------------------------------------
+``make_workflow_workload`` emits DAG-structured sessions instead of
+independent requests.  Three templates cover the agentic shapes the
+paper targets:
+
+  * ``tool_chain``  — linear chain of 3..6 tool-call steps,
+  * ``reflection``  — draft -> critique -> revise loops (critiques short),
+  * ``fanout``      — plan -> m parallel tool steps -> synthesize join.
+
+Step *k+1*'s prompt embeds step *k*'s output, so context (and the
+shared session prefix an instance can cache) grows along the chain;
+the SLO is a single **per-workflow deadline** derived from the solo
+critical-path time on the reference GPU times ``slo_scale``.  Knobs:
+``n_workflows``, ``rps`` (workflow arrivals/s), ``slo_scale``,
+``kind_mix`` (template probabilities), ``arrival`` process, and
+``seed``.  Steps carry DAG structure (``wid``/``step``/``parents``/
+``downstream``) and a ``session`` id for KV/prefix affinity; only
+*structure* is visible to routers — ground-truth lengths stay hidden.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import List, Optional, Sequence
+from typing import Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
@@ -50,6 +70,17 @@ class Request:
     arrival: float
     slo: float = 0.0          # absolute E2E deadline duration (seconds)
     prefix_group: int = 0     # shared-prompt-prefix group (for prefix cache)
+    # -- agentic-workflow structure (visible to routers; lengths are not) --
+    wid: int = -1             # workflow id (-1 = standalone request)
+    step: int = 0             # step index within the workflow DAG
+    parents: Tuple[int, ...] = ()   # step indices this step depends on
+    downstream: int = 0       # longest chain of steps remaining AFTER this
+    session: int = -1         # session id for KV/prefix-cache affinity
+    # first-parent ancestor chain, nearest first: only THESE steps'
+    # contexts are contiguous prefixes of this step's prompt (a fanout
+    # sibling's context is in the same session but NOT a prefix)
+    prefix_chain: Tuple[int, ...] = ()
+    deadline_t: Optional[float] = None  # absolute per-WORKFLOW deadline
 
 
 @dataclasses.dataclass(frozen=True)
@@ -161,3 +192,151 @@ def train_corpus(n: int = 8680, seed: int = 1):
     """Predictor training corpus (the paper trains on 8,680 samples)."""
     rng = np.random.default_rng(seed)
     return [sample_request(rng, i) for i in range(n)]
+
+
+# ---------------------------------------------------------------------------
+# Multi-step agentic workflows (DAG-structured sessions)
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class Workflow:
+    wid: int
+    kind: str                 # tool_chain | reflection | fanout
+    arrival: float
+    deadline: float           # E2E deadline duration (seconds) for ALL steps
+    steps: List[Request]
+
+    @property
+    def deadline_t(self) -> float:
+        return self.arrival + self.deadline
+
+    def roots(self) -> List[Request]:
+        return [s for s in self.steps if not s.parents]
+
+
+# Per-role output-length scaling: critiques are short, synthesis joins
+# are longer than a single tool call.
+_ROLE_OUT_SCALE = {"draft": 1.0, "critique": 0.35, "revise": 0.8,
+                   "tool": 0.7, "plan": 0.4, "synth": 1.2}
+
+_CTX_CAP = 6144               # max prefill length after context embedding
+
+
+def _workflow_plan(rng, kind: str) -> List[Tuple[str, str, Tuple[int, ...]]]:
+    """Return (family, role, parents) per step for one template."""
+    if kind == "tool_chain":
+        k = int(rng.integers(3, 7))
+        fams = [("sql", "code", "swe")[rng.integers(3)] for _ in range(k)]
+        return [(fams[i], "tool", () if i == 0 else (i - 1,))
+                for i in range(k)]
+    if kind == "reflection":
+        rounds = int(rng.integers(1, 3))          # 1..2 critique/revise loops
+        plan = [("code", "draft", ())]
+        for _ in range(rounds):
+            plan.append(("swe", "critique", (len(plan) - 1,)))
+            plan.append(("code", "revise", (len(plan) - 1,)))
+        return plan
+    if kind == "fanout":
+        m = int(rng.integers(2, 5))               # parallel tool calls
+        plan = [("code", "plan", ())]
+        plan += [(("sql", "swe")[rng.integers(2)], "tool", (0,))
+                 for _ in range(m)]
+        plan.append(("code", "synth", tuple(range(1, m + 1))))
+        return plan
+    raise KeyError(kind)
+
+
+def _downstream_depths(plan) -> List[int]:
+    """Longest chain of steps strictly below each node (reverse topo)."""
+    n = len(plan)
+    children: Dict[int, List[int]] = {i: [] for i in range(n)}
+    for i, (_, _, parents) in enumerate(plan):
+        for p in parents:
+            children[p].append(i)
+    depth = [0] * n
+    for i in reversed(range(n)):
+        depth[i] = max((1 + depth[c] for c in children[i]), default=0)
+    return depth
+
+
+def make_workflow(rng, wid: int, arrival: float, rid0: int,
+                  kind: Optional[str] = None, slo_scale: float = 3.0,
+                  model: str = "llama3.1-8b",
+                  reference_gpu: str = "A800") -> Workflow:
+    """One DAG session: step k+1's prompt embeds step k's output, so the
+    prefill context grows along the chain and consecutive steps share the
+    session's KV prefix.  The deadline covers the whole workflow: solo
+    critical-path time on the reference GPU x ``slo_scale``."""
+    kind = kind or ("tool_chain", "reflection", "fanout")[rng.integers(3)]
+    plan = _workflow_plan(rng, kind)
+    depths = _downstream_depths(plan)
+    fp = hwlib.footprint(model)
+    ref = hwlib.GPUS[reference_gpu]
+    prefix_group = int(rng.integers(0, 32))      # shared system prompt
+
+    steps: List[Request] = []
+    for i, (family, role, parents) in enumerate(plan):
+        base = sample_request(rng, rid0 + i, family)
+        out = int(np.clip(base.output_len * _ROLE_OUT_SCALE[role], 8, 8192))
+        # conversation context carried from parents: their full prefill
+        # context plus the output each one appended
+        ctx = sum(steps[p].input_len + steps[p].output_len for p in parents)
+        input_len = int(min(base.input_len + ctx, _CTX_CAP))
+        # the child prompt literally embeds the tail of each parent prompt
+        # (standing in for "step k's output feeds step k+1")
+        parent_tail = " ".join(
+            w for p in parents for w in steps[p].prompt.split()[-24:])
+        prompt = (parent_tail + " " + base.prompt).strip()
+        chain = ((parents[0],) + steps[parents[0]].prefix_chain
+                 if parents else ())
+        steps.append(Request(
+            rid=rid0 + i, family=family, prompt=prompt,
+            input_len=input_len, output_len=out, arrival=arrival,
+            prefix_group=prefix_group, wid=wid, step=i,
+            parents=tuple(parents), downstream=depths[i], session=wid,
+            prefix_chain=chain))
+
+    # deadline = solo critical path on the reference GPU x slo_scale
+    finish = [0.0] * len(steps)
+    for i, s in enumerate(steps):
+        start = max((finish[p] for p in s.parents), default=0.0)
+        finish[i] = start + solo_latency(ref, fp, s)
+    deadline = max(finish) * slo_scale
+    for s in steps:
+        s.slo = deadline
+        s.deadline_t = arrival + deadline
+    return Workflow(wid=wid, kind=kind, arrival=arrival,
+                    deadline=deadline, steps=steps)
+
+
+def make_workflow_workload(n_workflows: int = 80, rps: float = 2.0,
+                           slo_scale: float = 3.0,
+                           model: str = "llama3.1-8b", seed: int = 0,
+                           arrival: str = "mooncake",
+                           kind_mix: Optional[Dict[str, float]] = None,
+                           reference_gpu: str = "A800"
+                           ) -> Tuple[List[Request], List[Workflow]]:
+    """DAG-structured agentic workload: returns (all step requests in
+    topological order per workflow, workflow descriptors).  ``rps`` is
+    *workflow* arrivals per second; non-root steps materialize in the
+    simulator only once their parents complete."""
+    rng = np.random.default_rng(seed)
+    arr = (mooncake_like_arrivals(rng, n_workflows, rps)
+           if arrival == "mooncake"
+           else poisson_arrivals(rng, n_workflows, rps))
+    kinds = list(kind_mix) if kind_mix else None
+    probs = None
+    if kind_mix:
+        total = sum(kind_mix.values())
+        probs = [kind_mix[k] / total for k in kinds]
+    workflows, requests = [], []
+    rid = 0
+    for w in range(n_workflows):
+        kind = (kinds[rng.choice(len(kinds), p=probs)] if kinds else None)
+        wf = make_workflow(rng, w, float(arr[w]), rid, kind=kind,
+                           slo_scale=slo_scale, model=model,
+                           reference_gpu=reference_gpu)
+        rid += len(wf.steps)
+        workflows.append(wf)
+        requests.extend(wf.steps)
+    return requests, workflows

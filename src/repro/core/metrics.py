@@ -1,7 +1,11 @@
-"""Goodput / SLO metrics (paper Sec. 4.1)."""
+"""Goodput / SLO metrics (paper Sec. 4.1), at request and *workflow*
+granularity.  A multi-step agentic workflow is good only if every one of
+its steps completes and the LAST step finishes within the single
+per-workflow deadline — the paper's end-to-end SLO semantics."""
 from __future__ import annotations
 
-from typing import Sequence
+from collections import defaultdict
+from typing import Dict, Sequence, Tuple
 
 
 def goodput(finished, total_duration: float) -> float:
@@ -23,6 +27,62 @@ def slo_violation_ratio(finished) -> float:
               if r.finished_at is None
               or (r.finished_at - r.req.arrival) > r.req.slo)
     return bad / n
+
+
+def _group_workflows(finished) -> Dict[int, list]:
+    by_wid = defaultdict(list)
+    for r in finished:
+        if r.req.wid >= 0:
+            by_wid[r.req.wid].append(r)
+    return by_wid
+
+
+def workflow_outcomes(finished) -> Dict[int, Tuple[bool, float]]:
+    """wid -> (met_deadline, completion_time).  A workflow completes when
+    all its steps are done; its completion time is the last step's finish;
+    it is good iff that is within the shared absolute deadline."""
+    out = {}
+    for wid, steps in _group_workflows(finished).items():
+        if any(s.finished_at is None for s in steps):
+            out[wid] = (False, float("inf"))
+            continue
+        end = max(s.finished_at for s in steps)
+        deadline = max(s.deadline for s in steps)
+        out[wid] = (end <= deadline, end)
+    return out
+
+
+def workflow_goodput(finished, total_duration: float) -> float:
+    """Workflows finishing within their E2E deadline per second."""
+    ok = sum(1 for good, _ in workflow_outcomes(finished).values() if good)
+    return ok / max(total_duration, 1e-9)
+
+
+def workflow_violation_ratio(finished) -> float:
+    outcomes = workflow_outcomes(finished)
+    if not outcomes:
+        return 0.0
+    bad = sum(1 for good, _ in outcomes.values() if not good)
+    return bad / len(outcomes)
+
+
+def summarize_workflows(finished, total_duration: float) -> dict:
+    outcomes = workflow_outcomes(finished)
+    by_wid = _group_workflows(finished)
+    makespans = []
+    for wid, steps in by_wid.items():
+        if all(s.finished_at is not None for s in steps):
+            arr = min(s.req.arrival for s in steps)
+            makespans.append(max(s.finished_at for s in steps) - arr)
+    return {
+        "workflow_goodput_wps": workflow_goodput(finished, total_duration),
+        "workflow_violation_ratio": workflow_violation_ratio(finished),
+        "n_workflows": len(outcomes),
+        "n_steps": sum(len(v) for v in by_wid.values()),
+        "mean_makespan_s": sum(makespans) / max(len(makespans), 1),
+        "migrations": sum(getattr(r, "n_migrations", 0) for r in finished),
+        "duration_s": total_duration,
+    }
 
 
 def summarize(finished, total_duration: float) -> dict:

@@ -20,7 +20,7 @@ from __future__ import annotations
 import dataclasses
 import time
 from functools import partial
-from typing import List, Optional, Sequence
+from typing import Dict, List, Optional, Sequence
 
 import jax
 import jax.numpy as jnp
@@ -332,6 +332,51 @@ class TransformerProxyPredictor:
 
     def predict_requests(self, requests) -> np.ndarray:
         return self.predict([r.prompt for r in requests], None)
+
+
+class SessionAwarePredictor:
+    """Wrap any base predictor with per-session running statistics.
+
+    Consecutive steps of an agentic session are strongly correlated (same
+    task, same agent scaffold), so the wrapper blends the base per-prompt
+    prediction with the running mean of the session's recent completed
+    step outputs.  Routers detect the extended interface through the
+    ``session_aware`` flag and feed completions via ``observe_step``."""
+    name = "session"
+    session_aware = True
+
+    def __init__(self, base, blend: float = 0.5, window: int = 8):
+        self.base = base
+        self.blend = blend
+        self.window = window
+        self.hist: Dict[int, List[float]] = {}
+
+    def fit(self, requests, **kw):
+        self.base.fit(requests, **kw)
+        return self
+
+    def observe_step(self, session: int, output_len: float):
+        h = self.hist.setdefault(int(session), [])
+        h.append(float(output_len))
+        if len(h) > self.window:
+            del h[0]
+
+    def predict(self, prompts, input_lens, generated=None,
+                sessions=None) -> np.ndarray:
+        p = np.asarray(self.base.predict(prompts, input_lens, generated),
+                       np.float32).copy()
+        if sessions is None:
+            return p
+        for i, s in enumerate(sessions):
+            h = self.hist.get(int(s)) if s is not None and s >= 0 else None
+            if h:
+                p[i] = (1 - self.blend) * p[i] + self.blend * np.mean(h)
+        return p
+
+    def predict_requests(self, requests) -> np.ndarray:
+        return self.predict([r.prompt for r in requests],
+                            [r.input_len for r in requests],
+                            sessions=[r.session for r in requests])
 
 
 def evaluate_mae(pred: np.ndarray, truth: np.ndarray) -> float:

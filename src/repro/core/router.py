@@ -50,6 +50,10 @@ class Router:
     def on_risk_check(self, sr: SimRequest, t: float):
         pass
 
+    def on_request_done(self, sr: SimRequest, t: float):
+        """Completion hook (e.g. to update per-session length beliefs)."""
+        pass
+
     def on_tick(self, t: float):
         pass
 
@@ -77,7 +81,10 @@ class RandomP2C(Router):
 
 class RoundRobin(Router):
     name = "round_robin"
-    _next = 0
+
+    def __init__(self, seed: int = 0):
+        super().__init__(seed)
+        self._next = 0   # instance state: two routers must not interfere
 
     def _route(self, sr, t):
         ids = self._alive_ids()
@@ -166,7 +173,14 @@ class LlumnixRouter(Router):
 # ---------------------------------------------------------------------------
 
 class GoodServeRouter(Router):
-    """Predict-and-rectify goodput routing (paper Sec. 3.4, Alg. 1)."""
+    """Predict-and-rectify goodput routing (paper Sec. 3.4, Alg. 1),
+    extended to multi-step agentic workflows: for a DAG step the router
+    predicts the *remaining workflow work* (downstream critical-path
+    steps x predictor-sized per-step decode), checks feasibility against
+    the single per-workflow deadline (budgeting slack across the
+    remaining steps), and prefers the instance holding the session's
+    cached KV prefix among feasible candidates.  Risk checks and
+    migration likewise operate on workflow slack, not per-step slack."""
     name = "goodserve"
 
     def __init__(self, predictor, seed: int = 0, enable_migration: bool = True,
@@ -175,6 +189,7 @@ class GoodServeRouter(Router):
         self.predictor = predictor
         self.enable_migration = enable_migration
         self.migration_mode = migration_mode
+        self._rr_cold = 0   # instance state: cold-start round-robin cursor
         # feasibility margin: T <= margin * slack.  The EMA estimates lag a
         # growing batch and exclude this request's own interference, so
         # riding the exact T == D_r boundary tips marginal requests over;
@@ -188,9 +203,21 @@ class GoodServeRouter(Router):
         self.inflight_window_s = 3.0
 
     def _predict(self, sr: SimRequest) -> float:
-        out = self.predictor.predict([sr.req.prompt], [sr.req.input_len],
-                                     [sr.tokens_out])
+        if getattr(self.predictor, "session_aware", False):
+            out = self.predictor.predict([sr.req.prompt], [sr.req.input_len],
+                                         [sr.tokens_out],
+                                         sessions=[sr.req.session])
+        else:
+            out = self.predictor.predict([sr.req.prompt], [sr.req.input_len],
+                                         [sr.tokens_out])
         return float(out[0])
+
+    @staticmethod
+    def _downstream_steps(sr: SimRequest) -> int:
+        """Steps left on the workflow's longest remaining chain after this
+        one — DAG *structure* is client-declared and router-visible;
+        step lengths are not (the predictor sizes them)."""
+        return max(sr.req.downstream, 0)
 
     def _queue_estimate(self, i: int, t: float) -> float:
         """AVGWAITTIME(g) as a *live* signal: combine the EMA of completed
@@ -227,7 +254,6 @@ class GoodServeRouter(Router):
 
     max_migrations = 2
     min_obs = 3          # cold-start: explore before trusting EMAs
-    _rr_cold = 0
 
     def _route(self, sr, t):
         sr.pred_out = self._predict(sr)
@@ -238,12 +264,23 @@ class GoodServeRouter(Router):
             self._rr_cold += 1
             return cold[self._rr_cold % len(cold)]
         T, d = self._latencies(sr, ids, sr.pred_out, sr.req.input_len, t)
-        slack = sr.req.slo - (t - sr.req.arrival)
-        feasible = np.nonzero(T <= self.margin * slack)[0]
+        slack = sr.deadline - t
+        # remaining workflow work after this step: assume downstream steps
+        # are predictor-sized decodes (their prefills mostly hit the
+        # session cache under affinity routing)
+        down = self._downstream_steps(sr)
+        R = T + down * d * sr.pred_out
+        feasible = np.nonzero(R <= self.margin * slack)[0]
         if feasible.size:                       # just-enough: slowest feasible
+            if sr.req.session >= 0:
+                # prefer the instance holding the session's cached prefix
+                hits = np.array([self.cluster.instances[ids[int(i)]]
+                                 .session_hit(sr.req) for i in feasible])
+                if (hits > 0).any():
+                    feasible = feasible[hits > 0]
             k = feasible[np.argmax(d[feasible])]
         else:                                    # best-effort fallback
-            k = int(np.argmin(T - slack))
+            k = int(np.argmin(R - slack))
         gid = ids[int(k)]
         est = self.cluster.estimator
         work = est.snapshot(gid).p * sr.req.input_len \
@@ -260,7 +297,11 @@ class GoodServeRouter(Router):
         remaining = total_pred - sr.tokens_out
         sr.pred_out = total_pred
         gid = sr.instance
-        finish_here = self._current_d(gid, sr) * remaining
+        down = self._downstream_steps(sr)
+        d_here = self._current_d(gid, sr)
+        # workflow slack: this step's remaining decode plus the estimated
+        # downstream steps must all fit before the workflow deadline
+        finish_here = d_here * (remaining + down * total_pred)
         slack = sr.deadline - t
         if finish_here <= slack:
             return
@@ -270,15 +311,22 @@ class GoodServeRouter(Router):
         if not ids:
             return
         T, d = self._latencies(sr, ids, remaining, sr.context_len, t)
-        feasible = np.nonzero(T <= self.margin * slack)[0]
+        R = T + down * d * total_pred
+        feasible = np.nonzero(R <= self.margin * slack)[0]
         if feasible.size:
             k = int(feasible[np.argmax(d[feasible])])
         else:
-            k = int(np.argmin(T))
+            k = int(np.argmin(R))
             # only move if materially better than staying (avoid ping-pong)
-            if T[k] >= 0.8 * finish_here:
+            if R[k] >= 0.8 * finish_here:
                 return
         self.sim.migrate(sr, ids[k], t, mode=self.migration_mode)
+
+    def on_request_done(self, sr: SimRequest, t: float):
+        if (self.predictor is not None
+                and hasattr(self.predictor, "observe_step")
+                and sr.req.session >= 0):
+            self.predictor.observe_step(sr.req.session, sr.tokens_out)
 
 
 class OracleRouter(GoodServeRouter):
@@ -293,12 +341,9 @@ class OracleRouter(GoodServeRouter):
 
     def __init__(self, seed: int = 0, enable_migration: bool = True,
                  margin: float = 0.7):
-        Router.__init__(self, seed)
-        self.enable_migration = enable_migration
-        self.migration_mode = "token_id"
-        self.margin = margin
-        self._recent_routes = []
-        self.inflight_window_s = 3.0
+        # predictor=None: the oracle reads ground-truth lengths instead
+        super().__init__(None, seed=seed, enable_migration=enable_migration,
+                         migration_mode="token_id", margin=margin)
 
     def _predict(self, sr):
         return float(sr.req.output_len)

@@ -1,0 +1,99 @@
+"""Property-testing shim: re-exports hypothesis when installed, otherwise
+provides a minimal drop-in fallback (seeded random example generation).
+
+The container this repo targets does not guarantee hypothesis, and we
+cannot pip-install inside it, so every property test imports
+``given/settings/st`` from here instead of from hypothesis directly.
+The fallback covers exactly the strategy surface our tests use:
+``floats``, ``integers``, ``booleans``, ``lists``, ``sampled_from``,
+``tuples``.  Examples are generated from a seed derived from the test
+name, so failures reproduce deterministically; the failing example is
+attached to the raised assertion.
+"""
+from __future__ import annotations
+
+try:  # pragma: no cover - prefer the real thing when available
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ModuleNotFoundError:
+    HAVE_HYPOTHESIS = False
+
+    import zlib
+
+    import numpy as np
+
+    class _Strategy:
+        def __init__(self, draw):
+            self._draw = draw
+
+        def example(self, rng):
+            return self._draw(rng)
+
+    class _St:
+        @staticmethod
+        def floats(min_value=0.0, max_value=1.0, **_):
+            def draw(rng):
+                r = rng.random()
+                if r < 0.05:
+                    return float(min_value)
+                if r < 0.10:
+                    return float(max_value)
+                return float(rng.uniform(min_value, max_value))
+            return _Strategy(draw)
+
+        @staticmethod
+        def integers(min_value=0, max_value=100, **_):
+            return _Strategy(
+                lambda rng: int(rng.integers(min_value, max_value + 1)))
+
+        @staticmethod
+        def booleans():
+            return _Strategy(lambda rng: bool(rng.integers(0, 2)))
+
+        @staticmethod
+        def sampled_from(seq):
+            items = list(seq)
+            return _Strategy(lambda rng: items[rng.integers(len(items))])
+
+        @staticmethod
+        def lists(elem, min_size=0, max_size=10, **_):
+            def draw(rng):
+                n = int(rng.integers(min_size, max_size + 1))
+                return [elem.example(rng) for _ in range(n)]
+            return _Strategy(draw)
+
+        @staticmethod
+        def tuples(*elems):
+            return _Strategy(
+                lambda rng: tuple(e.example(rng) for e in elems))
+
+    st = _St()
+
+    def given(**strategies):
+        def decorate(fn):
+            # NB: no functools.wraps — exposing __wrapped__ would make
+            # pytest read fn's signature and demand fixtures for the
+            # strategy-filled parameters.
+            def wrapper(*args, **kw):
+                n = getattr(wrapper, "_max_examples", 25)
+                seed = zlib.crc32(fn.__qualname__.encode())
+                rng = np.random.default_rng(seed)
+                for _ in range(n):
+                    ex = {k: s.example(rng) for k, s in strategies.items()}
+                    try:
+                        fn(*args, **ex, **kw)
+                    except Exception as err:
+                        raise AssertionError(
+                            f"falsifying example for {fn.__name__}: "
+                            f"{ex!r}") from err
+            wrapper._max_examples = 25
+            wrapper.__name__ = fn.__name__
+            wrapper.__doc__ = fn.__doc__
+            return wrapper
+        return decorate
+
+    def settings(max_examples=25, **_):
+        def decorate(fn):
+            fn._max_examples = max_examples
+            return fn
+        return decorate

@@ -4,3 +4,15 @@ import sys
 # Smoke tests must see exactly 1 CPU device (the dry-run sets its own
 # XLA_FLAGS before any jax import — never here).
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+
+class ConstPredictor:
+    """Shared constant output-length predictor for router/simulator/
+    workflow tests (one definition; interface changes land here once)."""
+
+    def __init__(self, v=150.0):
+        self.v = float(v)
+
+    def predict(self, prompts, input_lens, generated=None):
+        import numpy as np
+        return np.full(len(prompts), self.v, np.float32)

@@ -2,7 +2,8 @@
 and the estimator, plus unit tests of every baseline router."""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hyp import given, settings, st
+from conftest import ConstPredictor
 
 from repro.cluster import hardware as hwlib
 from repro.cluster.simulator import (Cluster, Instance, SimRequest,
@@ -11,14 +12,6 @@ from repro.cluster.workload import Request, sample_request
 from repro.core.estimator import EMAEstimator
 from repro.core.router import (ALL_BASELINES, GoodServeRouter, OracleRouter,
                                make_router)
-
-
-class ConstPredictor:
-    def __init__(self, v):
-        self.v = v
-
-    def predict(self, prompts, input_lens, generated=None):
-        return np.full(len(prompts), self.v, np.float32)
 
 
 def _mini_cluster(n=4, model="llama3.1-8b"):
@@ -138,6 +131,39 @@ def test_round_robin_cycles():
     ids = [router.route(SimRequest(req=r), 0.0) for r in reqs]
     assert ids[:4] == ids[4:]
     assert sorted(ids[:4]) == [0, 1, 2, 3]
+
+
+def test_router_instances_do_not_share_state():
+    """Regression: RoundRobin._next / GoodServeRouter._rr_cold used to be
+    CLASS attributes, so two router instances advanced each other's
+    cursors.  Each instance must route independently."""
+    from repro.core.router import RoundRobin
+
+    assert "_next" not in RoundRobin.__dict__
+    assert "_rr_cold" not in GoodServeRouter.__dict__
+
+    reqs = [sample_request(np.random.default_rng(i), i) for i in range(4)]
+    r1, r2 = make_router("round_robin"), make_router("round_robin")
+    Simulator(_mini_cluster(4), r1, reqs)
+    Simulator(_mini_cluster(4), r2, reqs)
+    # interleave: r2's routing must not advance r1's cursor
+    seq1 = []
+    for r in reqs:
+        seq1.append(r1.route(SimRequest(req=r), 0.0))
+        r2.route(SimRequest(req=r), 0.0)
+        r2.route(SimRequest(req=r), 0.0)
+    assert seq1 == [0, 1, 2, 3]
+
+    # GoodServe cold-start cursors are independent too
+    g1 = GoodServeRouter(ConstPredictor(100.0))
+    g2 = GoodServeRouter(ConstPredictor(100.0))
+    Simulator(_mini_cluster(4), g1, reqs)
+    Simulator(_mini_cluster(4), g2, reqs)
+    seen1 = {g1._route(SimRequest(req=r), 0.0) for r in reqs}
+    for r in reqs:
+        g2._route(SimRequest(req=r), 0.0)
+    seen1b = {g1._route(SimRequest(req=r), 0.0) for r in reqs}
+    assert seen1 == seen1b == {0, 1, 2, 3}
 
 
 def test_least_request_prefers_empty():

@@ -1,21 +1,21 @@
 """Cluster-simulator invariants: conservation, completion, chunked
-prefill, prefix caching, migration semantics, failure recovery."""
+prefill, prefix caching, migration semantics, failure recovery — plus
+property tests (hypothesis, or the _hyp fallback shim when hypothesis
+isn't installed) for the termination/conservation invariants."""
 import numpy as np
 import pytest
 
+from _hyp import given, settings, st
+from conftest import ConstPredictor
 from repro.cluster.simulator import Simulator, build_paper_cluster
-from repro.cluster.workload import make_workload
-from repro.core.metrics import summarize
+from repro.cluster.workload import make_workflow_workload, make_workload
+from repro.core.metrics import summarize, workflow_outcomes
 from repro.core.router import GoodServeRouter, make_router
 
 
-class ConstPredictor:
-    def predict(self, prompts, input_lens, generated=None):
-        return np.full(len(prompts), 150.0, np.float32)
-
-
-def _run(router_name="least_request", n=60, fail_at=None, tau=50, **kw):
-    reqs = make_workload(n=n, rps=20.0, slo_scale=2.0, seed=5, **kw)
+def _run(router_name="least_request", n=60, fail_at=None, tau=50, seed=5,
+         **kw):
+    reqs = make_workload(n=n, rps=20.0, slo_scale=2.0, seed=seed, **kw)
     cluster = build_paper_cluster()
     router = make_router(router_name,
                          predictor=ConstPredictor()
@@ -89,3 +89,46 @@ def test_chunked_prefill_progress_monotonic():
 def test_tpm_counter_positive_after_serving():
     out, dur, sim = _run(n=30)
     assert any(g._tpm_tokens > 0 for g in sim.cluster.instances)
+
+
+# ---------------------------------------------------------------------------
+# Conservation properties: every submitted request/workflow terminates
+# exactly once as done (or failed), across migration and failure injection.
+# ---------------------------------------------------------------------------
+
+def _assert_terminates_exactly_once(out):
+    for sr in out:
+        assert sr.state in ("done", "failed")
+        terminal = [e for e in sr.journey if e[1] in ("done", "failed")]
+        assert len(terminal) == 1, sr.journey
+        if sr.state == "done":
+            assert sr.tokens_out == sr.req.output_len
+            assert sr.finished_at is not None
+
+
+@settings(max_examples=5, deadline=None)
+@given(seed=st.integers(0, 10_000), fail=st.booleans())
+def test_requests_terminate_exactly_once(seed, fail):
+    """Aggressive risk checks (tau=20 -> migrations) and an instance
+    failure must never lose or double-complete a request."""
+    out, _, sim = _run("goodserve", n=40, tau=20,
+                       fail_at={1: 1.5} if fail else None, seed=seed)
+    _assert_terminates_exactly_once(out)
+    if fail:
+        assert not sim.cluster.instances[1].alive
+
+
+@settings(max_examples=4, deadline=None)
+@given(seed=st.integers(0, 10_000), fail=st.booleans())
+def test_workflows_terminate_exactly_once(seed, fail):
+    """Every DAG step of every workflow terminates exactly once, and
+    every workflow reaches a defined outcome, even under failures."""
+    reqs, wfs = make_workflow_workload(n_workflows=10, rps=2.0, seed=seed)
+    cluster = build_paper_cluster()
+    router = make_router("goodserve", predictor=ConstPredictor())
+    sim = Simulator(cluster, router, reqs, tau=25, workflows=wfs,
+                    fail_at={2: 2.0} if fail else None)
+    out, _ = sim.run()
+    _assert_terminates_exactly_once(out)
+    outcomes = workflow_outcomes(out)
+    assert set(outcomes) == {w.wid for w in wfs}

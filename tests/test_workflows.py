@@ -1,0 +1,295 @@
+"""Multi-step agentic workflow layer: generator DAG structure, deferred
+step arrivals, per-workflow deadline accounting, session prefix reuse,
+workflow-aware routing, and workflow-goodput metric correctness."""
+import numpy as np
+import pytest
+
+from repro.cluster import hardware as hwlib
+from repro.cluster.simulator import (Cluster, Instance, SimRequest,
+                                     Simulator, build_paper_cluster)
+from repro.cluster.workload import (_CTX_CAP, Request, make_workflow,
+                                    make_workflow_workload)
+from repro.core.metrics import (summarize_workflows, workflow_goodput,
+                                workflow_outcomes, workflow_violation_ratio)
+from conftest import ConstPredictor
+from repro.core.predictor import SessionAwarePredictor
+from repro.core.router import GoodServeRouter, make_router
+
+
+def _run_workflows(router_name="goodserve", n=20, rps=2.0, seed=7,
+                   slo_scale=3.0, **kw):
+    reqs, wfs = make_workflow_workload(n_workflows=n, rps=rps,
+                                       slo_scale=slo_scale, seed=seed)
+    cluster = build_paper_cluster()
+    router = make_router(router_name,
+                         predictor=ConstPredictor()
+                         if router_name == "goodserve" else None)
+    sim = Simulator(cluster, router, reqs, workflows=wfs, **kw)
+    out, dur = sim.run()
+    return out, dur, sim, wfs
+
+
+# ---- generator: DAG structure ----------------------------------------------
+
+@pytest.mark.parametrize("kind", ["tool_chain", "reflection", "fanout"])
+def test_generator_dag_is_topological(kind):
+    rng = np.random.default_rng(0)
+    for w in range(10):
+        wf = make_workflow(rng, w, arrival=0.0, rid0=100 * w, kind=kind)
+        for s in wf.steps:
+            assert all(p < s.step for p in s.parents)
+            assert s.wid == w and s.session == w
+        # downstream = longest chain strictly below the node
+        assert max(s.downstream for s in wf.steps) == \
+            max(s.downstream for s in wf.roots())
+        sinks = [s for s in wf.steps if s.downstream == 0]
+        assert sinks, "every DAG has at least one sink"
+
+
+def test_tool_chain_downstream_counts():
+    rng = np.random.default_rng(1)
+    wf = make_workflow(rng, 0, arrival=0.0, rid0=0, kind="tool_chain")
+    k = len(wf.steps)
+    for i, s in enumerate(wf.steps):
+        assert s.parents == (() if i == 0 else (i - 1,))
+        assert s.downstream == k - 1 - i
+
+
+def test_fanout_structure():
+    rng = np.random.default_rng(2)
+    wf = make_workflow(rng, 0, arrival=0.0, rid0=0, kind="fanout")
+    plan, tools, synth = wf.steps[0], wf.steps[1:-1], wf.steps[-1]
+    assert plan.parents == () and plan.downstream == 2
+    for tool in tools:
+        assert tool.parents == (0,) and tool.downstream == 1
+    assert synth.parents == tuple(range(1, len(wf.steps) - 1))
+    assert synth.downstream == 0
+
+
+def test_child_context_embeds_parent_output():
+    """Step k+1's prefill context carries step k's input + output."""
+    rng = np.random.default_rng(3)
+    wf = make_workflow(rng, 0, arrival=0.0, rid0=0, kind="tool_chain")
+    for s in wf.steps[1:]:
+        parent = wf.steps[s.parents[0]]
+        expected_min = min(parent.input_len + parent.output_len + 32,
+                           _CTX_CAP)
+        assert s.input_len >= expected_min
+        assert s.input_len <= _CTX_CAP
+        # the prompt literally embeds the parent prompt's tail
+        tail = parent.prompt.split()[-24:]
+        assert " ".join(tail) in s.prompt
+
+
+def test_workflow_deadline_is_shared_and_absolute():
+    reqs, wfs = make_workflow_workload(n_workflows=5, rps=2.0, seed=9)
+    for wf in wfs:
+        assert wf.deadline > 0
+        for s in wf.steps:
+            assert s.deadline_t == pytest.approx(wf.arrival + wf.deadline)
+            assert SimRequest(req=s).deadline == pytest.approx(
+                wf.deadline_t)
+
+
+# ---- simulator: deferred arrivals + ordering --------------------------------
+
+def test_steps_materialize_only_after_parents():
+    out, _, _, wfs = _run_workflows(n=15)
+    by_key = {(sr.req.wid, sr.req.step): sr for sr in out}
+    assert all(sr.state == "done" for sr in out)
+    for sr in out:
+        if not sr.req.parents:
+            continue
+        first_enq = next(t for (t, ev, _) in sr.journey if ev == "enq")
+        for p in sr.req.parents:
+            parent = by_key[(sr.req.wid, p)]
+            assert parent.finished_at is not None
+            # journey timestamps are rounded to 2 decimals
+            assert first_enq >= parent.finished_at - 0.011
+        # the child's arrival was rewritten to its release time
+        assert sr.req.arrival == pytest.approx(
+            max(by_key[(sr.req.wid, p)].finished_at
+                for p in sr.req.parents))
+
+
+def test_workflow_steps_all_complete_across_routers():
+    for name in ("round_robin", "least_request", "goodserve"):
+        out, _, _, _ = _run_workflows(router_name=name, n=10)
+        assert all(sr.state == "done" for sr in out)
+        assert all(sr.tokens_out == sr.req.output_len for sr in out)
+
+
+# ---- session prefix reuse ---------------------------------------------------
+
+def test_session_prefix_reused_across_consecutive_steps():
+    """On a single instance, every non-root step must hit the session's
+    cached prefix (>= the parent's whole context, capped by input)."""
+    reqs, wfs = make_workflow_workload(n_workflows=3, rps=0.2, seed=11)
+    fp = hwlib.footprint("llama3.1-8b")
+    cluster = Cluster([Instance(0, hwlib.GPUS["A800"], fp)])
+    router = make_router("least_request")
+    sim = Simulator(cluster, router, reqs, workflows=wfs)
+    out, _ = sim.run()
+    by_key = {(sr.req.wid, sr.req.step): sr for sr in out}
+    checked = 0
+    for sr in out:
+        if not sr.req.parents:
+            continue
+        parent = by_key[(sr.req.wid, sr.req.parents[0])]
+        expect = min(parent.req.input_len + parent.req.output_len,
+                     sr.req.input_len)
+        assert sr.prefill_hit >= expect
+        checked += 1
+    assert checked > 0
+
+
+def test_session_cache_lru_eviction():
+    fp = hwlib.footprint("llama3.1-8b")
+    g = Instance(0, hwlib.GPUS["A800"], fp, session_capacity=2)
+    for sid in (1, 2, 3):
+        r = Request(rid=sid, family="sql", prompt="x", input_len=100,
+                    output_len=10, arrival=0.0, session=sid)
+        g.note_session(r, 500)
+    r1 = Request(rid=9, family="sql", prompt="x", input_len=100,
+                 output_len=10, arrival=0.0, session=1,
+                 parents=(0,), prefix_chain=(0,))
+    r3 = Request(rid=10, family="sql", prompt="x", input_len=100,
+                 output_len=10, arrival=0.0, session=3,
+                 parents=(0,), prefix_chain=(0,))
+    assert g.session_hit(r1) == 0          # evicted (LRU)
+    assert g.session_hit(r3) == 100        # capped by input_len
+
+
+# ---- workflow-aware routing -------------------------------------------------
+
+def _two_speed_router(pred=100.0, d_values=(0.01, 0.08)):
+    fp = hwlib.footprint("llama3.1-8b")
+    names = list(hwlib.GPUS)
+    cluster = Cluster([Instance(i, hwlib.GPUS[names[i]], fp)
+                       for i in range(len(d_values))])
+    router = GoodServeRouter(ConstPredictor(pred))
+    req = Request(rid=0, family="sql", prompt="q", input_len=100,
+                  output_len=100, arrival=0.0, slo=20.0)
+    sim = Simulator(cluster, router, [req])
+    for i, d in enumerate(d_values):
+        e = cluster.estimator._get(i)
+        e.d, e.p, e.q, e.n_obs = d, 1e-5, 0.0, 10
+    return router, cluster, req
+
+
+def test_downstream_steps_tighten_feasibility():
+    """Same slack: a lone request rides the slow instance (just-enough),
+    but a step with 3 downstream steps must take the fast one."""
+    router, _, req = _two_speed_router()
+    lone = SimRequest(req=req)
+    assert router._route(lone, t=0.0) == 1      # slowest feasible
+    router2, _, req2 = _two_speed_router()
+    req2.wid, req2.session, req2.downstream = 0, 0, 3
+    req2.deadline_t = 20.0
+    step = SimRequest(req=req2)
+    assert router2._route(step, t=0.0) == 0     # budget across steps
+
+
+def test_session_affinity_prefers_cached_instance():
+    router, cluster, req = _two_speed_router(d_values=(0.01, 0.01))
+    req.wid = req.session = 7
+    req.deadline_t = 1e9
+    parent = Request(rid=99, family="sql", prompt="p", input_len=200,
+                     output_len=50, arrival=0.0, wid=7, step=0, session=7)
+    cluster.instances[1].note_session(parent, 400)
+    req.step, req.parents, req.prefix_chain = 1, (0,), (0,)
+    sr = SimRequest(req=req)
+    assert router._route(sr, t=0.0) == 1        # ties broken by session KV
+
+
+def test_fanout_sibling_earns_no_session_credit():
+    """A parallel sibling's context is in the same session but is NOT a
+    prefix of this step's prompt — it must not count as a cache hit."""
+    fp = hwlib.footprint("llama3.1-8b")
+    g = Instance(0, hwlib.GPUS["A800"], fp)
+    rng = np.random.default_rng(5)
+    wf = make_workflow(rng, 0, arrival=0.0, rid0=0, kind="fanout")
+    plan, tool1, tool2 = wf.steps[0], wf.steps[1], wf.steps[2]
+    g.note_session(tool1, tool1.input_len + tool1.output_len)
+    assert g.session_hit(tool2) == 0           # sibling: no credit
+    g.note_session(plan, plan.input_len + plan.output_len)
+    assert g.session_hit(tool2) == min(plan.input_len + plan.output_len,
+                                       tool2.input_len)
+    # the join step's contiguous prefix is its FIRST parent's context
+    synth = wf.steps[-1]
+    assert g.session_hit(synth) == min(tool1.input_len + tool1.output_len,
+                                       synth.input_len)
+
+
+def test_risk_check_uses_workflow_slack():
+    """A step on a pace to miss the *workflow* deadline (because of its
+    downstream steps) migrates even when its own step could finish."""
+    router, cluster, req = _two_speed_router(d_values=(0.005, 0.05))
+    req.wid = req.session = 0
+    req.downstream = 4
+    req.deadline_t = 28.0
+    sr = SimRequest(req=req, state="running", instance=1, tokens_out=10)
+    cluster.instances[1].running.append(sr)
+    migrated = []
+    router.sim.migrate = lambda s, dst, t, mode: migrated.append(dst)
+    router.on_risk_check(sr, t=5.0)
+    # own step: 0.05 * 90 = 4.5s < 23s slack, but the workflow needs
+    # 0.05 * (90 + 4*100) = 24.5s > 23s -> must move to the fast GPU
+    assert migrated == [0]
+
+
+# ---- session-aware predictor ------------------------------------------------
+
+def test_session_aware_predictor_blends_history():
+    p = SessionAwarePredictor(ConstPredictor(100.0), blend=0.5)
+    p.observe_step(5, 300.0)
+    p.observe_step(5, 300.0)
+    out = p.predict(["a", "b"], [10, 10], sessions=[5, -1])
+    assert out[0] == pytest.approx(200.0)       # blended with history
+    assert out[1] == pytest.approx(100.0)       # no session -> base only
+    assert p.predict(["a"], [10])[0] == pytest.approx(100.0)
+
+
+def test_session_aware_predictor_window():
+    p = SessionAwarePredictor(ConstPredictor(0.0), blend=1.0, window=2)
+    for v in (10.0, 20.0, 30.0):
+        p.observe_step(1, v)
+    assert p.predict(["a"], [1], sessions=[1])[0] == pytest.approx(25.0)
+
+
+# ---- workflow-goodput metrics -----------------------------------------------
+
+def _fake_step(wid, step, arrival, deadline_t, finished_at):
+    r = Request(rid=wid * 10 + step, family="sql", prompt="x",
+                input_len=10, output_len=5, arrival=arrival, slo=1.0,
+                wid=wid, step=step, session=wid, deadline_t=deadline_t)
+    sr = SimRequest(req=r)
+    sr.finished_at = finished_at
+    sr.state = "done" if finished_at is not None else "pending"
+    return sr
+
+def test_workflow_goodput_metric_correctness():
+    steps = [
+        _fake_step(0, 0, 0.0, 10.0, 4.0),   # wf 0: last step at 9 < 10 OK
+        _fake_step(0, 1, 0.0, 10.0, 9.0),
+        _fake_step(1, 0, 0.0, 10.0, 8.0),   # wf 1: last step at 12 > 10 BAD
+        _fake_step(1, 1, 0.0, 10.0, 12.0),
+        _fake_step(2, 0, 0.0, 10.0, 2.0),   # wf 2: unfinished step -> BAD
+        _fake_step(2, 1, 0.0, 10.0, None),
+    ]
+    outcomes = workflow_outcomes(steps)
+    assert outcomes[0][0] and outcomes[0][1] == pytest.approx(9.0)
+    assert not outcomes[1][0]
+    assert not outcomes[2][0]
+    assert workflow_goodput(steps, 10.0) == pytest.approx(0.1)
+    assert workflow_violation_ratio(steps) == pytest.approx(2 / 3)
+
+
+def test_workflow_summary_consistent_with_simulation():
+    out, dur, _, wfs = _run_workflows(n=12)
+    s = summarize_workflows(out, dur)
+    assert s["n_workflows"] == len(wfs)
+    assert s["n_steps"] == len(out)
+    assert 0.0 <= s["workflow_violation_ratio"] <= 1.0
+    assert s["workflow_goodput_wps"] * dur == pytest.approx(
+        (1 - s["workflow_violation_ratio"]) * s["n_workflows"], abs=1e-6)
