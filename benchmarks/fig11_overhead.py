@@ -43,12 +43,13 @@ def run(sizes=(8, 32, 128, 512), rps_list=(1000, 10000), n_req: int = 512):
             t0 = time.perf_counter()
             for sr, p in zip(srs, preds):
                 sr.pred_out = float(p)
-                ids = router._alive_ids()
-                T, d = router._latencies(sr, ids, p, sr.req.input_len, 0.0)
+                router._prune_recent(0.0)
+                views = router.targets(0.0)
+                T, d = router._latencies(sr, views, p, sr.req.input_len, 0.0)
                 slack = sr.req.slo if sr.req.slo else 10.0
                 feasible = np.nonzero(T <= 0.7 * slack)[0]
-                _ = (ids[int(feasible[np.argmax(d[feasible])])]
-                     if feasible.size else ids[int(np.argmin(T))])
+                _ = (views[int(feasible[np.argmax(d[feasible])])].iid
+                     if feasible.size else views[int(np.argmin(T))].iid)
             select_us = (time.perf_counter() - t0) * 1e6 / n_req
             total_ms = (predict_us + select_us) / 1e3
             emit(f"fig11_M{m}_rps{rps}", predict_us + select_us,

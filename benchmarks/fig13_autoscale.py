@@ -1,0 +1,145 @@
+"""Fig. 13: elastic heterogeneous pool — static vs reactive vs forecast
+scaling under a diurnal workload.
+
+The diurnal trace swings between ~0.15x and ~1.85x the mean arrival
+rate.  A statically-sized pool must choose its regret: sized for the
+peak it overpays all trough long, sized for the mean it misses SLOs all
+peak long.  The elastic modes start from a 2-instance base pool
+(H800 + A800) and let a PoolController buy/return capacity from the
+catalog; GoodServe additionally runs early-shed admission control.
+Metrics are cost-aware: goodput over the (shared) arrival span, pool
+dollars, and goodput-per-dollar — the quantity autoscaling optimizes.
+
+Engines run max_num_seqs=32 (TPOT-protecting admission cap), so queue
+depth is a live backpressure signal the controllers can see.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from benchmarks.common import emit, timed
+from repro.cluster import hardware as hwlib
+from repro.cluster.simulator import Cluster, Instance, Simulator
+from repro.cluster.workload import FAMILIES, _FAMILY_WORDS, make_workload
+from repro.core.controller import (AdmissionController,
+                                   ForecastPoolController,
+                                   ReactivePoolController)
+from repro.core.metrics import summarize_elastic
+from repro.core.router import make_router
+
+ROUTERS = ["random", "least_request", "lowest_tpm", "preble",
+           "goodserve", "oracle"]
+MODES = ["static", "reactive", "forecast"]
+
+MAX_SEQS = 32
+WARMUP_S = 20.0      # elastic instances: container already staged
+
+
+def _gpu(name: str) -> hwlib.HardwareSpec:
+    return dataclasses.replace(hwlib.GPUS[name], max_seqs=MAX_SEQS)
+
+
+class FamilyMeanPredictor:
+    """Cheap black-box predictor for the autoscale benchmark: classify
+    the task family by keyword voting (the corpus vocabularies carry the
+    signal the paper's TF-IDF features use) and predict that family's
+    analytic mean output length.  No training loop, so the CI smoke run
+    stays fast; fig6/fig12 exercise the real MoE predictor."""
+
+    def __init__(self):
+        self.means = {}
+        for name, fam in FAMILIES.items():
+            m = (np.exp(fam.out_mu + fam.out_sigma ** 2 / 2)
+                 + fam.complexity_gain * 3.5)
+            if fam.bimodal_frac:
+                m = ((1 - fam.bimodal_frac) * m
+                     + fam.bimodal_frac * m * fam.bimodal_mult)
+            self.means[name] = float(m)
+        self.vocab = {w: f for f, ws in _FAMILY_WORDS.items() for w in ws}
+
+    def predict(self, prompts, input_lens, generated=None):
+        out = []
+        for p in prompts:
+            votes = {}
+            for w in p.split():
+                f = self.vocab.get(w)
+                if f:
+                    votes[f] = votes.get(f, 0) + 1
+            fam = max(votes, key=votes.get) if votes else "code"
+            out.append(self.means[fam])
+        return np.asarray(out, np.float32)
+
+
+def _cluster(mode: str):
+    fp = hwlib.footprint("llama3.1-8b")
+    if mode == "static":
+        # the paper's fixed heterogeneous testbed
+        names = ("H800", "A800", "A40", "V100")
+    else:
+        names = ("H800", "A800")      # reserved base; the rest is elastic
+    return Cluster([Instance(i, _gpu(n), fp)
+                    for i, n in enumerate(names)])
+
+
+def _controller(mode: str):
+    if mode == "static":
+        return None
+    # pass full specs so provisioned instances run the SAME engine
+    # config (max_seqs) as the base pool, not the stock catalog entry
+    kw = dict(scale_types=(_gpu("A800"), _gpu("A40")), max_instances=4,
+              min_active=2, interval=4.0, hi_load=12.0, lo_pending=2.5,
+              cooldown=1, warmup_override=WARMUP_S)
+    return (ReactivePoolController(**kw) if mode == "reactive"
+            else ForecastPoolController(**kw))
+
+
+def run(n: int = 2200, rps: float = 11.0, period: float = 200.0,
+        amplitude: float = 0.85, slo_scale: float = 2.5, seed: int = 4):
+    results = {}
+    for mode in MODES:
+        for name in ROUTERS:
+            reqs = make_workload(
+                n=n, rps=rps, slo_scale=slo_scale, seed=seed,
+                arrival="diurnal",
+                arrival_kw=dict(period=period, amplitude=amplitude))
+            span = max(r.arrival for r in reqs)
+            cluster = _cluster(mode)
+            pred = FamilyMeanPredictor()
+            router = make_router(
+                name, predictor=pred if name == "goodserve" else None)
+            # shed only the unambiguously doomed: a coarse predictor
+            # with a tight shed margin kills feasible work
+            adm = (AdmissionController(pred, margin=3.0)
+                   if name == "goodserve" else None)
+            sim = Simulator(cluster, router, reqs,
+                            pool=_controller(mode), admission=adm)
+            (out, dur), us = timed(sim.run)
+            s = summarize_elastic(out, dur, cluster)
+            # goodput over the shared arrival span: run-duration tails
+            # (one straggler request) must not distort the comparison
+            good = sum(1 for r in out if r.finished_at is not None
+                       and (r.finished_at - r.req.arrival) <= r.req.slo)
+            s["goodput_rps"] = good / span
+            s["goodput_per_usd"] = good / max(s["cost_usd"], 1e-9)
+            results[(mode, name)] = s
+            emit(f"fig13_{mode}_{name}", us,
+                 f"goodput={s['goodput_rps']:.3f}rps "
+                 f"viol={s['violation_ratio']:.3f} "
+                 f"cost=${s['cost_usd']:.2f} "
+                 f"gp_per_usd={s['goodput_per_usd']:.0f} "
+                 f"shed={s['n_shed']} pool={s['n_instances_total']}")
+    for mode in ("reactive", "forecast"):
+        rel = (results[(mode, "goodserve")]["goodput_per_usd"]
+               / max(results[("static", "goodserve")]["goodput_per_usd"],
+                     1e-9) - 1)
+        emit(f"fig13_{mode}_vs_static_gp_per_usd", 0.0, f"{rel * 100:+.1f}%")
+    worst = min(
+        results[(m, "goodserve")]["goodput_rps"]
+        - max(results[(m, r)]["goodput_rps"]
+              for r in ROUTERS if r not in ("goodserve", "oracle"))
+        for m in MODES)
+    emit("fig13_goodserve_min_margin_vs_baselines", 0.0,
+         f"{worst:+.3f}rps")
+    return results

@@ -21,7 +21,8 @@ def main() -> None:
     from benchmarks import (fig1_iteration_latency, fig2_motivation,
                             fig6_end_to_end, fig7_ablation, fig8_predictor,
                             fig9_migration, fig10_sensitivity,
-                            fig11_overhead, fig12_workflows, roofline)
+                            fig11_overhead, fig12_workflows,
+                            fig13_autoscale, roofline)
 
     n_sim = 200 if args.fast else 400
     n_fig2 = 300 if args.fast else 600
@@ -42,6 +43,9 @@ def main() -> None:
         # fig12's sim is cheap (~40s); at n=40 the workflow sample is too
         # small for stable router ordering, so fast mode keeps n=60
         "fig12": lambda: fig12_workflows.run(),
+        # fast mode halves the diurnal trace (first swell only): the
+        # scale-up path is exercised, the trough-side drain is not
+        "fig13": lambda: fig13_autoscale.run(n=1100 if args.fast else 2200),
         "roofline": lambda: roofline.run(),
     }
     only = [s for s in args.only.split(",") if s]

@@ -33,6 +33,9 @@ class HardwareSpec:
     max_seqs: int = 64     # engine admission cap (vLLM max_num_seqs-style);
                            # queues form beyond it, giving the proxy a live
                            # backpressure signal
+    cost_per_hour: float = 4.0   # on-demand $/hr for the whole instance
+    warmup_s: float = 40.0       # provision + weight-load latency before
+                                 # the instance can serve (elastic pool)
 
     @property
     def eff_flops(self) -> float:
@@ -44,15 +47,24 @@ class HardwareSpec:
         return self.hbm_gbps * 1e9 * self.mbu * self.tp
 
 
-# Published dense fp16/bf16 peaks (no sparsity).
+# Published dense fp16/bf16 peaks (no sparsity).  $/hr approximates
+# on-demand cloud list prices for the full instance (V100 runs TP=2, so
+# two cards); warmup covers VM provision + container pull + weight load.
 GPUS = {
-    "V100": HardwareSpec("V100", 125.0, 900.0, 32.0, tp=2),   # paper runs TP=2
-    "A40": HardwareSpec("A40", 149.7, 696.0, 48.0),
-    "A800": HardwareSpec("A800", 312.0, 2039.0, 80.0),
-    "H800": HardwareSpec("H800", 989.0, 3350.0, 80.0),
-    "v5e": HardwareSpec("v5e", 197.0, 819.0, 16.0, overhead_ms=2.0),
-    "v5p": HardwareSpec("v5p", 459.0, 2765.0, 95.0, overhead_ms=2.0),
-    "v4": HardwareSpec("v4", 275.0, 1228.0, 32.0, overhead_ms=2.0),
+    "V100": HardwareSpec("V100", 125.0, 900.0, 32.0, tp=2,    # paper TP=2
+                         cost_per_hour=4.9, warmup_s=55.0),
+    "A40": HardwareSpec("A40", 149.7, 696.0, 48.0,
+                        cost_per_hour=1.3, warmup_s=45.0),
+    "A800": HardwareSpec("A800", 312.0, 2039.0, 80.0,
+                         cost_per_hour=5.2, warmup_s=40.0),
+    "H800": HardwareSpec("H800", 989.0, 3350.0, 80.0,
+                         cost_per_hour=12.1, warmup_s=35.0),
+    "v5e": HardwareSpec("v5e", 197.0, 819.0, 16.0, overhead_ms=2.0,
+                        cost_per_hour=1.2, warmup_s=30.0),
+    "v5p": HardwareSpec("v5p", 459.0, 2765.0, 95.0, overhead_ms=2.0,
+                        cost_per_hour=4.2, warmup_s=30.0),
+    "v4": HardwareSpec("v4", 275.0, 1228.0, 32.0, overhead_ms=2.0,
+                       cost_per_hour=3.2, warmup_s=30.0),
 }
 
 PAPER_CLUSTER = ("H800", "A800", "A40", "V100")
@@ -114,10 +126,22 @@ def prefill_time(hw: HardwareSpec, fp: ModelFootprint, n_tokens: int,
     return max(compute, memory) + hw.overhead_ms / 1e3
 
 
+KV_FRACTION = 0.9   # HBM derate: fragmentation, activations, CUDA graphs
+
+
+def kv_capacity_bytes(hw: HardwareSpec, fp: ModelFootprint) -> float:
+    """Usable KV-cache bytes on an instance: total HBM across the TP
+    group minus ONE full copy of the weights (sharded over the group),
+    derated by ``KV_FRACTION``.  The single source of truth for KV
+    capacity — ``max_batch`` and ``Instance.mem_used_frac`` both pin to
+    it (they used to account weight bytes vs ``tp`` inconsistently)."""
+    total = hw.mem_gb * 1e9 * hw.tp
+    weights = fp.n_params * fp.dtype_bytes
+    return max((total - weights) * KV_FRACTION, 1.0)
+
+
 def max_batch(hw: HardwareSpec, fp: ModelFootprint,
               avg_total_len: float) -> int:
     """Memory-capacity bound on concurrent requests (Eq. 1's constraint)."""
-    weight_bytes = fp.n_params * fp.dtype_bytes / max(hw.tp, 1)
-    free = hw.mem_gb * 1e9 * hw.tp - weight_bytes * hw.tp
     per_req = max(avg_total_len, 1.0) * fp.kv_bytes_per_token
-    return max(int(free * 0.9 / per_req), 1)
+    return max(int(kv_capacity_bytes(hw, fp) / per_req), 1)

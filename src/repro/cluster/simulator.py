@@ -8,6 +8,11 @@ memory (Eq. 1's capacity constraint).  The proxy router observes only
 black-box signals (queue/wait/iteration timings, TPM counters, prefix
 tables) — the same information a production proxy has.
 
+The proxy side (routers, pool/admission controllers) observes the pool
+exclusively through ``Cluster.view(t)`` -> ``ClusterView`` snapshots
+(src/repro/core/observability.py), so proxy-visibility is enforced by
+construction rather than by comment.
+
 The simulator also supports:
   * SLO-risk checks every tau decode iterations per request (Sec. 3.4),
   * token-ID / KV-cache migration with explicit network cost (Fig. 9),
@@ -18,6 +23,13 @@ The simulator also supports:
     instance keeps a per-session KV/prefix cache so consecutive steps of
     a session routed to the same instance skip re-prefilling the shared
     conversation context,
+  * an ELASTIC pool: instance lifecycle provisioning -> warming ->
+    active -> draining -> retired, with ``provision()`` billing from
+    provision time and joining after the hardware's warmup latency,
+    ``drain()`` stopping admissions while running requests finish (or
+    migrate out), per-instance $/hr accrual (``Cluster.cost_usd``), and
+    optional PoolController / AdmissionController hooks driven from the
+    event loop (arrivals, completions, ticks),
   * deterministic seeds for reproducibility.
 """
 from __future__ import annotations
@@ -34,6 +46,7 @@ from repro.cluster import hardware as hwlib
 from repro.cluster.workload import Request, Workflow
 from repro.core.estimator import EMAEstimator
 from repro.core import migration as miglib
+from repro.core.observability import ClusterView
 
 
 @dataclasses.dataclass
@@ -73,16 +86,27 @@ def group_prefix_len(group: int) -> int:
     return 64 + (group * 37) % 384
 
 
+LIFECYCLE = ("provisioning", "warming", "active", "draining",
+             "retired", "failed")
+
+
 class Instance:
     def __init__(self, iid: int, hw: hwlib.HardwareSpec,
                  fp: hwlib.ModelFootprint, prefix_capacity: int = 8,
-                 session_capacity: int = 16):
+                 session_capacity: int = 16, state: str = "active",
+                 started_at: float = 0.0):
         self.iid = iid
         self.hw = hw
         self.fp = fp
         self.queue: deque = deque()
         self.running: List[SimRequest] = []
         self.alive = True
+        # lifecycle: provisioning -> warming -> active -> draining -> retired
+        # ("failed" via failure injection).  Billing runs started_at ..
+        # retired_at (or sim end).
+        self.state = state
+        self.started_at = started_at
+        self.retired_at: Optional[float] = None
         self.busy = False
         self.prefix_cache: OrderedDict = OrderedDict()
         self.prefix_capacity = prefix_capacity
@@ -99,6 +123,11 @@ class Instance:
         self._idle_gap = True
 
     # -- black-box observables -------------------------------------------
+
+    @property
+    def accepting(self) -> bool:
+        """May receive new admissions (drain stops these first)."""
+        return self.alive and self.state == "active"
 
     @property
     def pending(self) -> int:
@@ -119,9 +148,7 @@ class Instance:
     def mem_used_frac(self) -> float:
         used = sum(r.context_len for r in self.running) \
             * self.fp.kv_bytes_per_token
-        weight = self.fp.n_params * self.fp.dtype_bytes
-        cap = self.hw.mem_gb * 1e9 * self.hw.tp - weight
-        return min(used / max(cap, 1.0), 1.0)
+        return min(used / hwlib.kv_capacity_bytes(self.hw, self.fp), 1.0)
 
     def prefix_hit(self, req: Request) -> int:
         hit = 0
@@ -178,13 +205,34 @@ class Cluster:
     def alive(self) -> List[Instance]:
         return [g for g in self.instances if g.alive]
 
+    def view(self, t: float) -> ClusterView:
+        """The ONLY cluster surface routers/controllers may observe."""
+        return ClusterView.capture(self, t)
+
+    def add_instance(self, hw: hwlib.HardwareSpec, fp: hwlib.ModelFootprint,
+                     t: float) -> Instance:
+        g = Instance(len(self.instances), hw, fp, state="provisioning",
+                     started_at=t)
+        self.instances.append(g)
+        return g
+
+    def cost_usd(self, now: float) -> float:
+        """Accrued pool cost: every instance bills from its provision
+        time until retirement (or ``now``) — warmup is paid for too."""
+        usd = 0.0
+        for g in self.instances:
+            end = g.retired_at if g.retired_at is not None else now
+            usd += g.hw.cost_per_hour * max(end - g.started_at, 0.0) / 3600.0
+        return usd
+
 
 class Simulator:
     def __init__(self, cluster: Cluster, router, requests: Sequence[Request],
                  *, tau: int = 50, migration_mode: str = "token_id",
                  fail_at: Optional[Dict[int, float]] = None,
                  max_time: float = 86400.0,
-                 workflows: Optional[Sequence[Workflow]] = None):
+                 workflows: Optional[Sequence[Workflow]] = None,
+                 pool=None, admission=None):
         self.cluster = cluster
         self.router = router
         self.requests = [SimRequest(req=r) for r in requests]
@@ -192,9 +240,18 @@ class Simulator:
         self.migration_mode = migration_mode
         self.fail_at = fail_at or {}
         self.max_time = max_time
+        # elastic control plane (optional): the PoolController resizes the
+        # heterogeneous pool on ticks; the AdmissionController gates every
+        # arrival and sheds doomed work early.
+        self.pool = pool
+        self.admission = admission
         self._events: list = []
         self._seq = itertools.count()
         self.now = 0.0
+        # incrementally maintained count of terminal (done|failed)
+        # requests: the run loop is hot and must not rescan every
+        # request's state after every event
+        self._n_terminal = 0
         self.migration_log: List[Tuple[float, int, int, float]] = []
         # DAG bookkeeping: a step materializes only when its parents have
         # completed (deferred arrival).  Structure comes from the requests
@@ -209,6 +266,10 @@ class Simulator:
                 for p in r.parents:
                     self._wf_children.setdefault((r.wid, p), []).append(sr)
         router.attach(self)
+        if self.pool is not None:
+            self.pool.attach(self)
+        if self.admission is not None:
+            self.admission.attach(self)
 
     # -- event plumbing -----------------------------------------------------
 
@@ -256,6 +317,69 @@ class Simulator:
             skip = False  # re-prefill happens at the target queue
         self.migration_log.append((t, sr.instance, dst, lat))
         self._push(t + lat, "migrate_arrive", (sr, dst, skip))
+        self._maybe_retire(src.iid, t)
+
+    # -- elastic pool lifecycle ---------------------------------------------
+
+    def provision(self, hw, t: float,
+                  fp: Optional[hwlib.ModelFootprint] = None,
+                  warmup_s: Optional[float] = None) -> int:
+        """Start a new instance: provisioning -> warming -> active after
+        ``hw.warmup_s`` (VM allocation + weight load; override with
+        ``warmup_s``).  Billing starts now; routing starts at join."""
+        if isinstance(hw, str):
+            hw = hwlib.GPUS[hw]
+        fp = fp or self.cluster.instances[0].fp
+        warm = hw.warmup_s if warmup_s is None else warmup_s
+        g = self.cluster.add_instance(hw, fp, t)
+        self._push(t + 0.25 * warm, "warming", g.iid)
+        self._push(t + warm, "join", g.iid)
+        return g.iid
+
+    def drain(self, gid: int, t: float,
+              migrate_running: Optional[str] = None) -> bool:
+        """Stop new admissions on ``gid``; queued requests are re-routed
+        (token-ID resubmission, they hold no GPU state yet).  Running
+        requests finish in place by default, or migrate out immediately
+        when ``migrate_running`` is "kv"/"token_id".  The instance
+        retires once empty.  Refuses if no other instance is accepting."""
+        g = self.cluster.instances[gid]
+        if g.state != "active" or not g.alive:
+            return False
+        if not any(o.accepting for o in self.cluster.instances
+                   if o.iid != gid):
+            return False
+        g.state = "draining"
+        for sr in list(g.queue):
+            dst = self.router.route(sr, t)
+            self.migrate(sr, dst, t, mode="token_id")
+        if migrate_running:
+            for sr in list(g.running):
+                dst = self.router.route(sr, t)
+                self.migrate(sr, dst, t, mode=migrate_running)
+        self._maybe_retire(gid, t)
+        return True
+
+    def _maybe_retire(self, gid: int, t: float):
+        g = self.cluster.instances[gid]
+        if g.state == "draining" and not g.queue and not g.running:
+            g.state = "retired"
+            g.retired_at = t
+            g.busy = False
+
+    def _shed(self, sr: SimRequest, t: float):
+        """Admission rejection: fail the step now, and cascade to every
+        transitive child — a workflow missing one step can never meet
+        its deadline, so its remaining work is doomed too."""
+        stack = [sr]
+        while stack:
+            s = stack.pop()
+            if s.state in ("done", "failed"):
+                continue
+            s.state = "failed"
+            self._n_terminal += 1
+            s.journey.append((round(t, 2), "shed", -1))
+            stack.extend(self._wf_children.get((s.req.wid, s.req.step), []))
 
     # -- engine model ---------------------------------------------------------
 
@@ -353,10 +477,13 @@ class Simulator:
             for sr in done:
                 g.running.remove(sr)
                 sr.state = "done"
+                self._n_terminal += 1
                 sr.finished_at = t_next
                 sr.journey.append((round(t_next, 2), "done", gid))
                 g.note_session(sr.req, sr.context_len)
                 self.router.on_request_done(sr, t_next)
+                if self.pool is not None:
+                    self.pool.on_request_done(sr, t_next)
                 self._release_children(sr, t_next)
             for sr in at_risk:
                 self.router.on_risk_check(sr, t_next)
@@ -366,6 +493,7 @@ class Simulator:
         else:
             g.busy = False
             g._idle_gap = True
+            self._maybe_retire(gid, t_next)
 
     def _release_children(self, sr: SimRequest, t: float):
         """Deferred DAG arrivals: a child step materializes when its last
@@ -374,13 +502,19 @@ class Simulator:
         for child in self._wf_children.get((sr.req.wid, sr.req.step), []):
             key = (child.req.wid, child.req.step)
             self._wf_waiting[key] -= 1
-            if self._wf_waiting[key] == 0:
+            if self._wf_waiting[key] == 0 and child.state != "failed":
                 child.req.arrival = t
                 self._push(t, "arrival", child)
 
     def _fail_instance(self, gid: int, t: float):
         g = self.cluster.instances[gid]
+        if g.state == "retired":      # already drained: billing stays shut
+            g.alive = False
+            return
         g.alive = False
+        g.state = "failed"
+        if g.retired_at is None:
+            g.retired_at = t
         g.busy = False
         victims = list(g.queue) + list(g.running)
         g.queue.clear()
@@ -409,24 +543,42 @@ class Simulator:
             self.now = t
             if kind == "arrival":
                 sr = payload
-                gid = self.router.route(sr, t)
-                self.enqueue(sr, gid, t)
+                if sr.state == "failed":     # shed transitively meanwhile
+                    continue
+                if self.pool is not None:
+                    self.pool.on_arrival(t)
+                if (self.admission is not None
+                        and not self.admission.admit(sr, t)):
+                    self._shed(sr, t)
+                else:
+                    gid = self.router.route(sr, t)
+                    self.enqueue(sr, gid, t)
             elif kind == "step":
                 self._step(payload, t)
             elif kind == "migrate_arrive":
                 sr, dst, skip = payload
-                if not self.cluster.instances[dst].alive:
+                if not self.cluster.instances[dst].accepting:
                     dst = self.router.route(sr, t)
                     skip = False
                 self.enqueue(sr, dst, t, skip_prefill=skip)
             elif kind == "fail":
                 self._fail_instance(payload, t)
+            elif kind == "warming":
+                g = self.cluster.instances[payload]
+                if g.state == "provisioning":
+                    g.state = "warming"
+            elif kind == "join":
+                g = self.cluster.instances[payload]
+                if g.state in ("provisioning", "warming"):
+                    g.state = "active"
+                    self.router.on_instance_join(g.iid, t)
             elif kind == "tick":
                 self.router.on_tick(t)
-                if any(not sr.state == "done" for sr in self.requests):
+                if self.pool is not None:
+                    self.pool.on_tick(t)
+                if self._n_terminal < total:
                     self._push(t + tick, "tick", None)
-            finished = sum(1 for sr in self.requests if sr.state == "done")
-            if finished == total:
+            if self._n_terminal == total:
                 break
         return self.requests, self.now
 

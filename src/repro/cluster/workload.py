@@ -156,6 +156,36 @@ def mooncake_like_arrivals(rng, n: int, rps: float, cv: float = 1.3,
     return np.cumsum(inter / mod)
 
 
+def diurnal_arrivals(rng, n: int, rps: float, period: float = 600.0,
+                     amplitude: float = 0.7, cv: float = 1.2,
+                     floor: float = 0.05) -> np.ndarray:
+    """Diurnal/bursty pattern for the elastic-pool scenario: instantaneous
+    rate lambda(t) = rps * (1 + amplitude * sin(2 pi t / period - pi/2))
+    — starts at the trough, swells to (1 + amplitude) x rps mid-period —
+    with gamma (CV > 1) short-term burstiness on top.  This is the
+    workload where a statically-sized pool either overpays at the trough
+    or misses SLOs at the peak (SageServe's motivating regime)."""
+    shape = 1.0 / (cv * cv)
+    t = 0.0
+    out = np.empty(n)
+    for i in range(n):
+        lam = rps * max(1.0 + amplitude
+                        * np.sin(2 * np.pi * t / period - np.pi / 2), floor)
+        t += rng.gamma(shape, 1.0 / (lam * shape))
+        out[i] = t
+    return out
+
+
+def _arrival_times(rng, n: int, rps: float, arrival: str, **kw) -> np.ndarray:
+    if arrival == "mooncake":
+        return mooncake_like_arrivals(rng, n, rps, **kw)
+    if arrival == "diurnal":
+        return diurnal_arrivals(rng, n, rps, **kw)
+    if arrival == "poisson":
+        return poisson_arrivals(rng, n, rps)
+    raise KeyError(arrival)
+
+
 # ---------------------------------------------------------------------------
 # Workload assembly + SLO assignment (paper Sec. 4.1)
 # ---------------------------------------------------------------------------
@@ -170,21 +200,27 @@ def solo_latency(hw: hwlib.HardwareSpec, fp: hwlib.ModelFootprint,
     return t
 
 
-def make_workload(n: int = 600, rps: float = 10.0, slo_scale: float = 2.0,
+def make_workload(n: int = 600, rps: float = 10.0, slo_scale=2.0,
                   model: str = "llama3.1-8b", seed: int = 0,
                   arrival: str = "mooncake",
-                  reference_gpu: str = "A800") -> List[Request]:
+                  reference_gpu: str = "A800",
+                  arrival_kw: Optional[Dict] = None) -> List[Request]:
+    """``slo_scale`` may be a scalar (uniform tier, the paper's setup) or
+    a ``(lo, hi)`` tuple: each request draws its relaxation factor
+    uniformly, modeling mixed SLO tiers (interactive vs batch callers) —
+    the regime where slack-aware routing has real decisions to make."""
     rng = np.random.default_rng(seed)
     fp = hwlib.footprint(model)
     ref = hwlib.GPUS[reference_gpu]
     reqs = [sample_request(rng, i) for i in range(n)]
-    arr = (mooncake_like_arrivals(rng, n, rps) if arrival == "mooncake"
-           else poisson_arrivals(rng, n, rps))
+    arr = _arrival_times(rng, n, rps, arrival, **(arrival_kw or {}))
     # the paper sets SLO = median solo time on the mid-tier GPU x scale,
     # measured per request (temperature 0 => deterministic lengths)
     for r, a in zip(reqs, arr):
         r.arrival = float(a)
-        r.slo = solo_latency(ref, fp, r) * slo_scale
+        scale = (rng.uniform(*slo_scale) if isinstance(slo_scale, tuple)
+                 else slo_scale)
+        r.slo = solo_latency(ref, fp, r) * scale
     return reqs
 
 
@@ -314,16 +350,16 @@ def make_workflow_workload(n_workflows: int = 80, rps: float = 2.0,
                            model: str = "llama3.1-8b", seed: int = 0,
                            arrival: str = "mooncake",
                            kind_mix: Optional[Dict[str, float]] = None,
-                           reference_gpu: str = "A800"
+                           reference_gpu: str = "A800",
+                           arrival_kw: Optional[Dict] = None
                            ) -> Tuple[List[Request], List[Workflow]]:
     """DAG-structured agentic workload: returns (all step requests in
     topological order per workflow, workflow descriptors).  ``rps`` is
     *workflow* arrivals per second; non-root steps materialize in the
     simulator only once their parents complete."""
     rng = np.random.default_rng(seed)
-    arr = (mooncake_like_arrivals(rng, n_workflows, rps)
-           if arrival == "mooncake"
-           else poisson_arrivals(rng, n_workflows, rps))
+    arr = _arrival_times(rng, n_workflows, rps, arrival,
+                         **(arrival_kw or {}))
     kinds = list(kind_mix) if kind_mix else None
     probs = None
     if kind_mix:

@@ -1,7 +1,10 @@
 """Goodput / SLO metrics (paper Sec. 4.1), at request and *workflow*
-granularity.  A multi-step agentic workflow is good only if every one of
-its steps completes and the LAST step finishes within the single
-per-workflow deadline — the paper's end-to-end SLO semantics."""
+granularity, plus cost-aware variants for the elastic-pool scenario.
+A multi-step agentic workflow is good only if every one of its steps
+completes and the LAST step finishes within the single per-workflow
+deadline — the paper's end-to-end SLO semantics.  Cost metrics bill
+every instance from provision to retirement (warmup included), so
+goodput-per-dollar is what an operator actually pays for."""
 from __future__ import annotations
 
 from collections import defaultdict
@@ -83,6 +86,45 @@ def summarize_workflows(finished, total_duration: float) -> dict:
         "migrations": sum(getattr(r, "n_migrations", 0) for r in finished),
         "duration_s": total_duration,
     }
+
+
+# ---------------------------------------------------------------------------
+# Cost-aware goodput (elastic heterogeneous pool)
+# ---------------------------------------------------------------------------
+
+def cluster_cost_usd(cluster, duration: float) -> float:
+    """Dollars the pool accrued over the run (per-instance $/hr billed
+    from ``started_at`` to ``retired_at`` or run end)."""
+    return cluster.cost_usd(duration)
+
+
+def goodput_per_dollar(finished, duration: float, cluster) -> float:
+    """SLO-good requests per dollar of pool spend — the quantity elastic
+    scaling optimizes (goodput alone rewards overprovisioning)."""
+    good = sum(1 for r in finished
+               if r.finished_at is not None
+               and (r.finished_at - r.req.arrival) <= r.req.slo)
+    return good / max(cluster_cost_usd(cluster, duration), 1e-9)
+
+
+def workflow_goodput_per_dollar(finished, duration: float,
+                                cluster) -> float:
+    good = sum(1 for ok, _ in workflow_outcomes(finished).values() if ok)
+    return good / max(cluster_cost_usd(cluster, duration), 1e-9)
+
+
+def summarize_elastic(finished, duration: float, cluster) -> dict:
+    """Request-level summary extended with pool-cost accounting."""
+    s = summarize(finished, duration)
+    states = [g.state for g in cluster.instances]
+    s.update({
+        "cost_usd": cluster_cost_usd(cluster, duration),
+        "goodput_per_usd": goodput_per_dollar(finished, duration, cluster),
+        "n_shed": sum(1 for r in finished if r.state == "failed"),
+        "n_instances_total": len(states),
+        "n_retired": sum(1 for st in states if st in ("retired", "failed")),
+    })
+    return s
 
 
 def summarize(finished, total_duration: float) -> dict:

@@ -9,6 +9,7 @@ is why we carry both (DESIGN.md §3).
 from __future__ import annotations
 
 import dataclasses
+from typing import Optional
 
 from repro.cluster import hardware as hwlib
 
@@ -64,3 +65,28 @@ def kv_cache_migration_latency(net: NetworkSpec, fp,
                                context_len: int) -> float:
     """End-to-end KV-cache migration; no re-prefill needed."""
     return kv_transfer_latency(net, fp, context_len)
+
+
+def transfer_crossover_context(net: NetworkSpec, hw_dst, fp,
+                               hi: int = 1 << 18) -> Optional[int]:
+    """Smallest context length at which token-ID migration (transfer +
+    re-prefill at the target) becomes cheaper end-to-end than shipping
+    the KV cache.  Below it the KV path wins (the re-prefill's fixed
+    weight-read floor dominates); above it the per-token KV payload
+    does.  Returns None if token-ID never wins below ``hi`` — which is
+    the fast-link regime where the paper's conclusion flips."""
+    def gap(ctx: int) -> float:
+        return (token_id_migration_latency(net, hw_dst, fp, ctx)
+                - kv_cache_migration_latency(net, fp, ctx))
+    if gap(hi) > 0:
+        return None
+    if gap(1) <= 0:
+        return 1
+    lo = 1
+    while hi - lo > 1:
+        mid = (lo + hi) // 2
+        if gap(mid) > 0:
+            lo = mid
+        else:
+            hi = mid
+    return hi

@@ -1,0 +1,156 @@
+"""ClusterView / InstanceView: the proxy-visible snapshot API.
+
+Routers and pool/admission controllers must observe the cluster ONLY
+through these views — never by reaching into ``Instance.queue`` /
+``Instance.running`` (enforced by tests/test_observability.py).  A view
+carries exactly the information a production proxy has:
+
+  * what the proxy itself did: per-instance queue depth, the age and
+    prompt length of every request it routed there, the streamed token
+    counts of running requests (so context lengths are derivable),
+  * what the instance reports: lifecycle state, TPM counter, KV-memory
+    fraction, and the EMA capability estimates (q, p, d) built from
+    observable timing events,
+  * operator-side catalog facts: the hardware spec (incl. $/hr and
+    warmup latency) — the operator knows what it pays for.
+
+Cache probes (``prefix_hit`` / ``session_hit``) delegate to the
+instance's radix/session tables, mirroring the prefix-table RPC a real
+proxy issues; they expose hit *lengths*, not cache contents.
+
+``newest_queued`` / ``longest_running`` return opaque request handles
+for migration decisions (the proxy owns the requests it routed), so
+load balancers like Llumnix can pick migration victims without walking
+engine internals.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import cached_property
+from typing import List, Sequence
+
+from repro.cluster import hardware as hwlib
+from repro.core.estimator import InstanceEstimate
+
+
+@dataclasses.dataclass(frozen=True)
+class InstanceView:
+    """Point-in-time black-box snapshot of one serving instance.
+
+    Scalar facts are captured eagerly; the per-request detail vectors
+    (queue ages, prefill lengths, context lengths) are cached properties
+    computed on first access — a capture happens on every routing
+    decision and risk check, and most consumers (least-request, P2C,
+    the controllers) never touch the vectors, so eager materialization
+    would turn O(instances) decisions into O(total pending) ones.
+    Views are per-decision ephemera; don't hold one across simulated
+    time."""
+    iid: int
+    state: str                 # provisioning|warming|active|draining|retired|failed
+    alive: bool
+    accepting: bool            # may receive new admissions
+    n_queued: int
+    n_running: int
+    t: float                   # capture timestamp
+    ema: InstanceEstimate      # (q, p, d, n_obs) capability estimates
+    hw: hwlib.HardwareSpec
+    fp: hwlib.ModelFootprint
+    _inst: object = dataclasses.field(repr=False, compare=False, default=None)
+
+    @property
+    def pending(self) -> int:
+        return self.n_queued + self.n_running
+
+    @property
+    def cost_per_hour(self) -> float:
+        return self.hw.cost_per_hour
+
+    @cached_property
+    def tpm(self) -> float:
+        return self._inst.tpm(self.t)
+
+    @cached_property
+    def mem_used_frac(self) -> float:
+        return self._inst.mem_used_frac()
+
+    @cached_property
+    def queued_ages(self) -> tuple:
+        """Seconds each queued request has waited, FIFO order."""
+        return tuple(max(self.t - s.enqueued_at, 0.0)
+                     for s in self._inst.queue)
+
+    @cached_property
+    def queued_prefill_tokens(self) -> tuple:
+        """Prompt tokens still to prefill, per queued request."""
+        return tuple(s.prefill_len for s in self._inst.queue)
+
+    @cached_property
+    def running_context_lens(self) -> tuple:
+        """Prompt + streamed tokens, per running request."""
+        return tuple(r.context_len for r in self._inst.running)
+
+    # -- cache probes (hit lengths only, like a prefix-table RPC) ---------
+
+    def prefix_hit(self, req) -> int:
+        return self._inst.prefix_hit(req)
+
+    def session_hit(self, req) -> int:
+        return self._inst.session_hit(req)
+
+    # -- opaque migration-victim handles ----------------------------------
+
+    def newest_queued(self):
+        """Most recently queued request (cheapest to move: no progress)."""
+        return self._inst.queue[-1] if self._inst.queue else None
+
+    def queued_requests(self):
+        """Opaque handles of all queued requests, FIFO order — the proxy
+        routed them, so rescuing one elsewhere is its call to make."""
+        return list(self._inst.queue)
+
+    def longest_running(self):
+        """Running request with the largest context (most KV to free)."""
+        if not self._inst.running:
+            return None
+        return max(self._inst.running, key=lambda r: r.context_len)
+
+
+class ClusterView:
+    """Snapshot of every instance, in iid order."""
+
+    def __init__(self, views: Sequence[InstanceView]):
+        self.instances: List[InstanceView] = list(views)
+        self._by_iid = {v.iid: v for v in self.instances}
+
+    @classmethod
+    def capture(cls, cluster, t: float) -> "ClusterView":
+        views = []
+        for g in cluster.instances:
+            views.append(InstanceView(
+                iid=g.iid, state=g.state, alive=g.alive,
+                accepting=g.accepting,
+                n_queued=len(g.queue), n_running=len(g.running),
+                t=t, ema=cluster.estimator.snapshot(g.iid),
+                hw=g.hw, fp=g.fp, _inst=g))
+        return cls(views)
+
+    def view(self, iid: int) -> InstanceView:
+        return self._by_iid[iid]
+
+    def accepting(self) -> List[InstanceView]:
+        """Instances that may receive new admissions (routing targets)."""
+        return [v for v in self.instances if v.accepting]
+
+    def active(self) -> List[InstanceView]:
+        return [v for v in self.instances if v.alive and v.state == "active"]
+
+    def warming(self) -> List[InstanceView]:
+        """Capacity already paid for but not yet serving."""
+        return [v for v in self.instances
+                if v.state in ("provisioning", "warming")]
+
+    def draining(self) -> List[InstanceView]:
+        return [v for v in self.instances if v.state == "draining"]
+
+    def total_pending(self) -> int:
+        return sum(v.pending for v in self.accepting())

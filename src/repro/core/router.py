@@ -1,21 +1,39 @@
 """Request routers: GoodServe (Alg. 1) + the paper's baselines (Sec. 2.2).
 
-All routers see the same black-box cluster observables.  GoodServe
-additionally consults its output-length predictor and the EMA estimator,
-makes the *just-enough* selection (slowest feasible instance), and
-migrates SLO-at-risk requests at runtime.  The Oracle router gets
-ground-truth lengths and the analytic hardware model — the upper bound of
-Fig. 2.
+All routers see the same black-box cluster observables, and they see
+them ONLY through the :class:`~repro.core.observability.ClusterView`
+snapshot API — no router walks an Instance's internal queues or batch
+lists directly (enforced by tests/test_observability.py).
+GoodServe additionally consults its output-length predictor and the EMA
+estimates carried on the views, makes the *just-enough* selection
+(slowest feasible instance), and migrates SLO-at-risk requests at
+runtime.  The Oracle router gets ground-truth lengths and the analytic
+hardware model — the upper bound of Fig. 2.
 """
 from __future__ import annotations
 
 import time
+from collections import deque
 from typing import List, Optional
 
 import numpy as np
 
 from repro.cluster import hardware as hwlib
 from repro.cluster.simulator import SimRequest, Simulator
+from repro.core.observability import ClusterView, InstanceView
+
+
+def predict_output(predictor, sr: SimRequest) -> float:
+    """One output-length prediction for a (possibly mid-flight) request,
+    dispatching on the predictor's session-awareness.  Shared by routing
+    and admission control so the two can't silently diverge."""
+    if getattr(predictor, "session_aware", False):
+        out = predictor.predict([sr.req.prompt], [sr.req.input_len],
+                                [sr.tokens_out], sessions=[sr.req.session])
+    else:
+        out = predictor.predict([sr.req.prompt], [sr.req.input_len],
+                                [sr.tokens_out])
+    return float(out[0])
 
 
 class Router:
@@ -33,8 +51,22 @@ class Router:
     def cluster(self):
         return self.sim.cluster
 
-    def _alive_ids(self):
-        return [g.iid for g in self.cluster.instances if g.alive]
+    def view(self, t: float) -> ClusterView:
+        """Fresh proxy-visible snapshot of the whole pool."""
+        return self.sim.cluster.view(t)
+
+    def targets(self, t: float) -> List[InstanceView]:
+        """Instances currently accepting admissions, in iid order.  When
+        admission is closed everywhere (e.g. the last active instance
+        just failed while others drain), fall back to alive draining
+        instances — stranding work on an empty target list would crash
+        failure resubmission."""
+        cv = self.view(t)
+        views = cv.accepting()
+        if views:
+            return views
+        return [v for v in cv.instances
+                if v.alive and v.state == "draining"]
 
     # -- interface ----------------------------------------------------------
 
@@ -57,6 +89,10 @@ class Router:
     def on_tick(self, t: float):
         pass
 
+    def on_instance_join(self, gid: int, t: float):
+        """A provisioned instance finished warming and is now routable."""
+        pass
+
     def on_failure(self, gid: int, victims, t: float):
         """Token-ID resubmission of a dead instance's requests."""
         for sr in victims:
@@ -73,10 +109,10 @@ class RandomP2C(Router):
     name = "random"
 
     def _route(self, sr, t):
-        ids = self._alive_ids()
-        a, b = self.rng.choice(ids, size=2, replace=len(ids) < 2)
-        ga, gb = self.cluster.instances[a], self.cluster.instances[b]
-        return a if ga.pending <= gb.pending else b
+        views = self.targets(t)
+        a, b = self.rng.choice(len(views), size=2, replace=len(views) < 2)
+        va, vb = views[int(a)], views[int(b)]
+        return va.iid if va.pending <= vb.pending else vb.iid
 
 
 class RoundRobin(Router):
@@ -87,8 +123,8 @@ class RoundRobin(Router):
         self._next = 0   # instance state: two routers must not interfere
 
     def _route(self, sr, t):
-        ids = self._alive_ids()
-        gid = ids[self._next % len(ids)]
+        views = self.targets(t)
+        gid = views[self._next % len(views)].iid
         self._next += 1
         return gid
 
@@ -98,8 +134,7 @@ class LeastRequest(Router):
     name = "least_request"
 
     def _route(self, sr, t):
-        return min(self._alive_ids(),
-                   key=lambda i: self.cluster.instances[i].pending)
+        return min(self.targets(t), key=lambda v: v.pending).iid
 
 
 class LowestTPM(Router):
@@ -107,8 +142,7 @@ class LowestTPM(Router):
     name = "lowest_tpm"
 
     def _route(self, sr, t):
-        return min(self._alive_ids(),
-                   key=lambda i: self.cluster.instances[i].tpm(t))
+        return min(self.targets(t), key=lambda v: v.tpm).iid
 
 
 class PrefixCacheRouter(Router):
@@ -116,10 +150,8 @@ class PrefixCacheRouter(Router):
     name = "prefix_cache"
 
     def _route(self, sr, t):
-        return min(self._alive_ids(),
-                   key=lambda i: (-self.cluster.instances[i]
-                                  .prefix_hit(sr.req),
-                                  self.cluster.instances[i].pending))
+        return min(self.targets(t),
+                   key=lambda v: (-v.prefix_hit(sr.req), v.pending)).iid
 
 
 class PrebleRouter(Router):
@@ -129,15 +161,13 @@ class PrebleRouter(Router):
 
     def _route(self, sr, t):
         best, best_score = None, float("inf")
-        for i in self._alive_ids():
-            g = self.cluster.instances[i]
-            hit = g.prefix_hit(sr.req)
+        for v in self.targets(t):
+            hit = v.prefix_hit(sr.req)
             prefill_work = (sr.req.input_len - hit)
-            queued_work = sum(q.prefill_len for q in g.queue) \
-                + 64 * len(g.running)
+            queued_work = sum(v.queued_prefill_tokens) + 64 * v.n_running
             score = prefill_work + queued_work
             if score < best_score:
-                best, best_score = i, score
+                best, best_score = v.iid, score
         return best
 
 
@@ -148,24 +178,22 @@ class LlumnixRouter(Router):
     imbalance_threshold = 4
 
     def _route(self, sr, t):
-        return min(self._alive_ids(),
-                   key=lambda i: self.cluster.instances[i].mem_used_frac())
+        return min(self.targets(t), key=lambda v: v.mem_used_frac).iid
 
     def on_tick(self, t):
-        ids = self._alive_ids()
-        if len(ids) < 2:
+        views = self.targets(t)
+        if len(views) < 2:
             return
-        loads = [(self.cluster.instances[i].pending, i) for i in ids]
-        loads.sort()
-        (lo_n, lo), (hi_n, hi) = loads[0], loads[-1]
-        if hi_n - lo_n >= self.imbalance_threshold:
-            g_hi = self.cluster.instances[hi]
-            if g_hi.queue:
-                sr = g_hi.queue[-1]
-                self.sim.migrate(sr, lo, t, mode="token_id")
-            elif g_hi.running:
-                sr = max(g_hi.running, key=lambda r: r.context_len)
-                self.sim.migrate(sr, lo, t, mode="kv")
+        views = sorted(views, key=lambda v: v.pending)
+        lo, hi = views[0], views[-1]
+        if hi.pending - lo.pending >= self.imbalance_threshold:
+            sr = hi.newest_queued()
+            if sr is not None:
+                self.sim.migrate(sr, lo.iid, t, mode="token_id")
+                return
+            sr = hi.longest_running()
+            if sr is not None:
+                self.sim.migrate(sr, lo.iid, t, mode="kv")
 
 
 # ---------------------------------------------------------------------------
@@ -201,16 +229,16 @@ class GoodServeRouter(Router):
         # sees the same stale "feasible" slow instance.
         self._recent_routes: list = []
         self.inflight_window_s = 3.0
+        # per-instance completion timestamps (proxy-visible: the proxy
+        # streams every response).  Queues on a slot-saturated engine
+        # drain at the COMPLETION rate, not the prefill rate — without
+        # this term the wait estimate collapses at overload and the
+        # fallback path herds every request onto the fastest instance.
+        self._completions: dict = {}
+        self.completion_window_s = 45.0
 
     def _predict(self, sr: SimRequest) -> float:
-        if getattr(self.predictor, "session_aware", False):
-            out = self.predictor.predict([sr.req.prompt], [sr.req.input_len],
-                                         [sr.tokens_out],
-                                         sessions=[sr.req.session])
-        else:
-            out = self.predictor.predict([sr.req.prompt], [sr.req.input_len],
-                                         [sr.tokens_out])
-        return float(out[0])
+        return predict_output(self.predictor, sr)
 
     @staticmethod
     def _downstream_steps(sr: SimRequest) -> int:
@@ -219,74 +247,126 @@ class GoodServeRouter(Router):
         step lengths are not (the predictor sizes them)."""
         return max(sr.req.downstream, 0)
 
-    def _queue_estimate(self, i: int, t: float) -> float:
+    def _prune_recent(self, t: float):
+        """Drop in-flight entries older than the window — ONCE per
+        routing decision (not once per candidate instance)."""
+        self._recent_routes = [r for r in self._recent_routes
+                               if t - r[0] < self.inflight_window_s]
+
+    def _inflight(self, i: int) -> float:
+        return sum(w for (t0, gid, w) in self._recent_routes if gid == i)
+
+    def _completion_rate(self, v: InstanceView, t: float) -> float:
+        """Requests/s the instance finishes, over a recent window; 0.0
+        when there isn't enough signal yet."""
+        dq = self._completions.get(v.iid)
+        if not dq:
+            return 0.0
+        while dq and t - dq[0] > self.completion_window_s:
+            dq.popleft()
+        if len(dq) < 2:
+            return 0.0
+        return len(dq) / max(t - dq[0], 1e-3)
+
+    def _slot_wait(self, v: InstanceView, t: float) -> float:
+        """Expected wait for the queue ahead to clear at the instance's
+        observed completion rate (dominates when the engine is at its
+        admission cap and the queue drains one slot per finish)."""
+        if v.n_queued == 0:
+            return 0.0
+        rate = self._completion_rate(v, t)
+        if rate <= 0.0:
+            return 0.0
+        return v.n_queued / rate
+
+    def _queue_uncertainty(self, v: InstanceView, t: float) -> float:
+        """One completion interval of slack the estimates cannot see on
+        a queued instance (queue-wait predictions err by about one
+        drain step).  Charged against the FEASIBILITY test only: a
+        tight request shouldn't bet its deadline on a queued instance
+        when an unqueued one is feasible too, but overload ranking (the
+        fallback) must stay unpenalized or everything herds."""
+        if v.n_queued == 0:
+            return 0.0
+        rate = self._completion_rate(v, t)
+        return 1.0 / rate if rate > 0.0 else 0.0
+
+    def _queue_estimate(self, v: InstanceView, t: float) -> float:
         """AVGWAITTIME(g) as a *live* signal: combine the EMA of completed
         waits with the current queue's in-progress waits, its expected
         drain (queued prefill work x EMA prefill rate), and the unobserved
         prefill work of just-routed requests — all proxy-side observable,
         so still black-box w.r.t. the engine."""
-        est = self.cluster.estimator
-        g = self.cluster.instances[i]
-        q_ema = est.snapshot(i).q
-        self._recent_routes = [r for r in self._recent_routes
-                               if t - r[0] < self.inflight_window_s]
-        inflight = sum(w for (t0, gid, w) in self._recent_routes if gid == i)
-        if not g.queue:
-            return q_ema + inflight
-        live = float(np.mean([t - s.enqueued_at for s in g.queue]))
-        drain = est.snapshot(i).p * sum(s.prefill_len for s in g.queue)
-        return max(q_ema, live + drain) + inflight
+        inflight = self._inflight(v.iid)
+        if v.n_queued == 0:
+            return v.ema.q + inflight
+        live = float(np.mean(v.queued_ages))
+        drain = v.ema.p * sum(v.queued_prefill_tokens)
+        return max(v.ema.q, live + drain, self._slot_wait(v, t)) + inflight
 
-    def _latencies(self, sr: SimRequest, ids, remaining_out: float,
+    def _latencies(self, sr: SimRequest, views, remaining_out: float,
                    context_len: int, t: float):
-        """Vectorized T(r,g) over candidate instances (Eq. 2)."""
-        est = self.cluster.estimator
-        q = np.array([self._queue_estimate(i, t) for i in ids])
-        p = np.array([est.snapshot(i).p for i in ids])
-        d = np.array([est.snapshot(i).d for i in ids])
-        hits = np.array([self.cluster.instances[i].prefix_hit(sr.req)
-                         for i in ids], np.float32)
+        """Vectorized T(r,g) over candidate instance views (Eq. 2)."""
+        q = np.array([self._queue_estimate(v, t) for v in views])
+        p = np.array([v.ema.p for v in views])
+        d = np.array([v.ema.d for v in views])
+        hits = np.array([v.prefix_hit(sr.req) for v in views], np.float32)
         T = q + p * np.maximum(context_len - hits, 0) + d * remaining_out
         return T, d
 
-    def _current_d(self, gid: int, sr: SimRequest) -> float:
-        return self.cluster.estimator.snapshot(gid).d
+    def _current_d(self, v: InstanceView, sr: SimRequest) -> float:
+        return v.ema.d
 
     max_migrations = 2
     min_obs = 3          # cold-start: explore before trusting EMAs
+    tie_eps = 0.15       # d-equivalence band for the just-enough tie-break
 
     def _route(self, sr, t):
         sr.pred_out = self._predict(sr)
-        ids = self._alive_ids()
-        est = self.cluster.estimator
-        cold = [i for i in ids if est.snapshot(i).n_obs < self.min_obs]
+        views = self.targets(t)
+        self._prune_recent(t)
+        cold = [v.iid for v in views if v.ema.n_obs < self.min_obs]
         if cold:
             self._rr_cold += 1
             return cold[self._rr_cold % len(cold)]
-        T, d = self._latencies(sr, ids, sr.pred_out, sr.req.input_len, t)
+        T, d = self._latencies(sr, views, sr.pred_out, sr.req.input_len, t)
         slack = sr.deadline - t
         # remaining workflow work after this step: assume downstream steps
         # are predictor-sized decodes (their prefills mostly hit the
         # session cache under affinity routing)
         down = self._downstream_steps(sr)
         R = T + down * d * sr.pred_out
-        feasible = np.nonzero(R <= self.margin * slack)[0]
+        unc = np.array([self._queue_uncertainty(v, t) for v in views])
+        feasible = np.nonzero(R + unc <= self.margin * slack)[0]
         if feasible.size:                       # just-enough: slowest feasible
             if sr.req.session >= 0:
                 # prefer the instance holding the session's cached prefix
-                hits = np.array([self.cluster.instances[ids[int(i)]]
-                                 .session_hit(sr.req) for i in feasible])
+                hits = np.array([views[int(i)].session_hit(sr.req)
+                                 for i in feasible])
                 if (hits > 0).any():
                     feasible = feasible[hits > 0]
-            k = feasible[np.argmax(d[feasible])]
-        else:                                    # best-effort fallback
-            k = int(np.argmin(R - slack))
-        gid = ids[int(k)]
-        est = self.cluster.estimator
-        work = est.snapshot(gid).p * sr.req.input_len \
-            + 0.1 * est.snapshot(gid).d * sr.pred_out
-        self._recent_routes.append((t, gid, work))
-        return gid
+            # just-enough across SPEED CLASSES, load-balanced within one:
+            # concentrating on the single max-d instance preserves fast
+            # GPUs in a heterogeneous pool, but in a pool of near-equal
+            # instances it only builds a convoy — so among instances
+            # within tie_eps of the slowest feasible speed, take the one
+            # with the lowest estimated latency
+            dmax = float(d[feasible].max())
+            near = feasible[d[feasible] >= (1 - self.tie_eps) * dmax]
+            k = near[np.argmin(T[near])]
+        else:
+            # best-effort fallback: minimum predicted violation, but
+            # load-balanced within the near-minimum class — a lagging
+            # queue estimate otherwise funnels a whole burst of
+            # infeasible requests into one convoy on the fastest GPU
+            near = np.nonzero(R <= R.min() + 0.25 * max(slack, 0.5))[0]
+            pend = np.array([views[int(i)].pending for i in near])
+            k = near[int(np.argmin(pend))]
+        chosen = views[int(k)]
+        work = chosen.ema.p * sr.req.input_len \
+            + 0.1 * chosen.ema.d * sr.pred_out
+        self._recent_routes.append((t, chosen.iid, work))
+        return chosen.iid
 
     def on_risk_check(self, sr: SimRequest, t: float):
         if (not self.enable_migration or sr.state != "running"
@@ -297,8 +377,10 @@ class GoodServeRouter(Router):
         remaining = total_pred - sr.tokens_out
         sr.pred_out = total_pred
         gid = sr.instance
+        cv = self.view(t)
+        self._prune_recent(t)
         down = self._downstream_steps(sr)
-        d_here = self._current_d(gid, sr)
+        d_here = self._current_d(cv.view(gid), sr)
         # workflow slack: this step's remaining decode plus the estimated
         # downstream steps must all fit before the workflow deadline
         finish_here = d_here * (remaining + down * total_pred)
@@ -307,10 +389,10 @@ class GoodServeRouter(Router):
             return
         # current instance will violate: find a stronger feasible target,
         # still just-enough among feasible (Sec. 3.4)
-        ids = [i for i in self._alive_ids() if i != gid]
-        if not ids:
+        views = [v for v in cv.accepting() if v.iid != gid]
+        if not views:
             return
-        T, d = self._latencies(sr, ids, remaining, sr.context_len, t)
+        T, d = self._latencies(sr, views, remaining, sr.context_len, t)
         R = T + down * d * total_pred
         feasible = np.nonzero(R <= self.margin * slack)[0]
         if feasible.size:
@@ -320,9 +402,14 @@ class GoodServeRouter(Router):
             # only move if materially better than staying (avoid ping-pong)
             if R[k] >= 0.8 * finish_here:
                 return
-        self.sim.migrate(sr, ids[k], t, mode=self.migration_mode)
+        self.sim.migrate(sr, views[k].iid, t, mode=self.migration_mode)
 
     def on_request_done(self, sr: SimRequest, t: float):
+        if sr.instance is not None:
+            dq = self._completions.setdefault(sr.instance, deque())
+            dq.append(t)
+            while dq and t - dq[0] > self.completion_window_s:
+                dq.popleft()     # bound growth while the queue stays empty
         if (self.predictor is not None
                 and hasattr(self.predictor, "observe_step")
                 and sr.req.session >= 0):
@@ -348,31 +435,27 @@ class OracleRouter(GoodServeRouter):
     def _predict(self, sr):
         return float(sr.req.output_len)
 
-    def _latencies(self, sr, ids, remaining_out, context_len, t):
-        self._recent_routes = [r for r in self._recent_routes
-                               if t - r[0] < self.inflight_window_s]
+    def _latencies(self, sr, views, remaining_out, context_len, t):
         T, d = [], []
-        for i in ids:
-            g = self.cluster.instances[i]
-            b = max(len(g.running), 1)
-            avg_ctx = float(np.mean([r.context_len for r in g.running])) \
-                if g.running else context_len
-            d_i = hwlib.decode_iteration_time(g.hw, g.fp, b + 1, avg_ctx)
-            hit = g.prefix_hit(sr.req)
-            q_i = sum(hwlib.prefill_time(g.hw, g.fp, qq.prefill_len)
-                      for qq in g.queue)
-            q_i += sum(w for (t0, gid, w) in self._recent_routes if gid == i)
-            p_full = hwlib.prefill_time(g.hw, g.fp, context_len, hit)
+        for v in views:
+            b = max(v.n_running, 1)
+            avg_ctx = (float(np.mean(v.running_context_lens))
+                       if v.running_context_lens else context_len)
+            d_i = hwlib.decode_iteration_time(v.hw, v.fp, b + 1, avg_ctx)
+            hit = v.prefix_hit(sr.req)
+            q_i = sum(hwlib.prefill_time(v.hw, v.fp, pl)
+                      for pl in v.queued_prefill_tokens)
+            q_i += self._inflight(v.iid)
+            p_full = hwlib.prefill_time(v.hw, v.fp, context_len, hit)
             T.append(q_i + p_full + d_i * remaining_out)
             d.append(d_i)
         return np.asarray(T), np.asarray(d)
 
-    def _current_d(self, gid, sr):
-        g = self.cluster.instances[gid]
-        b = max(len(g.running), 1)
-        avg_ctx = float(np.mean([r.context_len for r in g.running])) \
-            if g.running else sr.context_len
-        return hwlib.decode_iteration_time(g.hw, g.fp, b, avg_ctx)
+    def _current_d(self, v, sr):
+        b = max(v.n_running, 1)
+        avg_ctx = (float(np.mean(v.running_context_lens))
+                   if v.running_context_lens else sr.context_len)
+        return hwlib.decode_iteration_time(v.hw, v.fp, b, avg_ctx)
 
 
 ALL_BASELINES = [RandomP2C, RoundRobin, LeastRequest, LowestTPM,

@@ -1,0 +1,57 @@
+"""Regression: KV-capacity accounting is unified.  ``hwlib.max_batch``
+and ``Instance.mem_used_frac`` used to account model-weight bytes vs
+``tp`` inconsistently; both must now pin to the single
+``kv_capacity_bytes`` helper."""
+import pytest
+
+from repro.cluster import hardware as hwlib
+from repro.cluster.simulator import Instance, SimRequest
+from repro.cluster.workload import Request
+
+FP = hwlib.footprint("llama3.1-8b")
+
+
+def _fake_running(instance, context_lens):
+    for i, ctx in enumerate(context_lens):
+        r = Request(rid=i, family="sql", prompt="p", input_len=ctx,
+                    output_len=1, arrival=0.0)
+        instance.running.append(SimRequest(req=r))
+
+
+@pytest.mark.parametrize("gpu", list(hwlib.GPUS))
+def test_max_batch_derives_from_kv_capacity(gpu):
+    hw = hwlib.GPUS[gpu]
+    for L in (128.0, 1024.0, 4096.0):
+        expect = max(int(hwlib.kv_capacity_bytes(hw, FP)
+                         / (L * FP.kv_bytes_per_token)), 1)
+        assert hwlib.max_batch(hw, FP, L) == expect
+
+
+@pytest.mark.parametrize("gpu", ["A800", "V100"])
+def test_mem_used_frac_derives_from_kv_capacity(gpu):
+    """V100 runs tp=2: the shared helper must count the total HBM of the
+    TP group minus ONE weight copy, identically for both callers."""
+    g = Instance(0, hwlib.GPUS[gpu], FP)
+    _fake_running(g, [500, 1500])
+    used = 2000 * FP.kv_bytes_per_token
+    assert g.mem_used_frac() == pytest.approx(
+        min(used / hwlib.kv_capacity_bytes(g.hw, FP), 1.0))
+
+
+def test_both_callers_pinned_to_shared_helper(monkeypatch):
+    """Monkeypatching the helper must move BOTH callers — proving
+    neither re-implements the capacity formula inline."""
+    g = Instance(0, hwlib.GPUS["A800"], FP)
+    _fake_running(g, [1000])
+    sentinel = 7.0 * 1000 * FP.kv_bytes_per_token
+    monkeypatch.setattr(hwlib, "kv_capacity_bytes",
+                        lambda hw, fp: sentinel)
+    assert g.mem_used_frac() == pytest.approx(1.0 / 7.0)
+    assert hwlib.max_batch(g.hw, FP, 1000.0) == 7
+
+
+def test_kv_capacity_positive_and_weight_aware():
+    for hw in hwlib.GPUS.values():
+        cap = hwlib.kv_capacity_bytes(hw, FP)
+        assert cap >= 1.0
+        assert cap <= hw.mem_gb * 1e9 * hw.tp * hwlib.KV_FRACTION

@@ -1,0 +1,232 @@
+"""Elastic control plane: reactive/forecast pool scaling against demand
+swings, early-shed admission control, and cost-aware metrics."""
+import numpy as np
+import pytest
+from conftest import ConstPredictor
+
+from repro.cluster import hardware as hwlib
+from repro.cluster.simulator import Cluster, Instance, Simulator
+from repro.cluster.workload import (Request, diurnal_arrivals,
+                                    make_workflow_workload, make_workload)
+from repro.core.controller import (AdmissionController,
+                                   ForecastPoolController,
+                                   ReactivePoolController)
+from repro.core.metrics import (goodput_per_dollar, summarize_elastic,
+                                workflow_outcomes)
+from repro.core.router import make_router
+
+FP = hwlib.footprint("llama3.1-8b")
+
+
+def _small_cluster(names=("A800",)):
+    return Cluster([Instance(i, hwlib.GPUS[n], FP)
+                    for i, n in enumerate(names)])
+
+
+# ---- arrival pattern --------------------------------------------------------
+
+def test_diurnal_arrivals_swing_rate_with_period():
+    rng = np.random.default_rng(0)
+    arr = diurnal_arrivals(rng, 4000, rps=10.0, period=200.0,
+                           amplitude=0.8)
+    assert np.all(np.diff(arr) > 0)
+    # trough quarter (t in [0,50)) must be much sparser than the peak
+    # quarter (t in [75,125))
+    trough = np.sum(arr < 50.0) / 50.0
+    peak = np.sum((arr >= 75.0) & (arr < 125.0)) / 50.0
+    assert peak > 3.0 * trough
+
+
+def test_make_workload_accepts_diurnal_arrival():
+    reqs = make_workload(n=50, rps=10.0, arrival="diurnal", seed=0,
+                         arrival_kw=dict(period=100.0))
+    assert len(reqs) == 50
+    assert all(r.slo > 0 for r in reqs)
+
+
+# ---- reactive scaling -------------------------------------------------------
+
+def test_reactive_scales_up_under_queue_pressure():
+    """One overloaded instance -> the controller provisions; the joined
+    capacity serves traffic and everything completes."""
+    reqs = make_workload(n=220, rps=30.0, slo_scale=3.0, seed=4)
+    cluster = _small_cluster(("A800",))
+    ctrl = ReactivePoolController(scale_types=("A800",), max_instances=4,
+                                  interval=2.0, hi_load=8.0,
+                                  warmup_override=3.0)
+    sim = Simulator(cluster, make_router("least_request"), reqs, pool=ctrl)
+    out, dur = sim.run()
+    assert any(a == "provision" for _, a, _ in ctrl.events)
+    assert len(cluster.instances) > 1
+    assert all(sr.state == "done" for sr in out)
+    # provisioned instances joined and served
+    added = [g for g in cluster.instances if g.iid > 0]
+    assert any(g.state == "active" for g in added)
+    served = {gid for sr in out for (_, ev, gid) in sr.journey
+              if ev == "enq"}
+    assert any(g.iid in served for g in added)
+
+
+def test_reactive_drains_after_demand_falls():
+    """Burst then a long sparse tail: the controller must give back the
+    burst capacity it provisioned (drain -> retired), never the base."""
+    rng = np.random.default_rng(1)
+    burst = [Request(rid=i, family="sql", prompt="p", input_len=200,
+                     output_len=60, arrival=float(rng.uniform(0, 4.0)),
+                     slo=60.0) for i in range(150)]
+    tail = [Request(rid=200 + i, family="sql", prompt="p", input_len=200,
+                    output_len=60, arrival=60.0 + 12.0 * i, slo=60.0)
+            for i in range(12)]
+    cluster = _small_cluster(("A800",))
+    ctrl = ReactivePoolController(scale_types=("A800",), max_instances=3,
+                                  interval=2.0, hi_load=8.0,
+                                  lo_pending=1.5, cooldown=2,
+                                  warmup_override=3.0)
+    sim = Simulator(cluster, make_router("least_request"),
+                    burst + tail, pool=ctrl)
+    out, _ = sim.run()
+    assert all(sr.state == "done" for sr in out)
+    assert any(a == "provision" for _, a, _ in ctrl.events)
+    assert any(a == "drain" for _, a, _ in ctrl.events)
+    assert any(g.state == "retired" for g in cluster.instances)
+    assert cluster.instances[0].state == "active"    # base pool protected
+
+
+def test_scale_up_filters_slo_infeasible_types():
+    """With a fast pool, the picker must refuse a dirt-cheap GPU that is
+    <50% of the pool's speed, even though it wins on bandwidth/$."""
+    cluster = _small_cluster(("H800",))
+    ctrl = ReactivePoolController(scale_types=("A800", "A40"))
+    ctrl.attach(Simulator(cluster, make_router("least_request"), []))
+    hw = ctrl.pick_scale_up(cluster.view(0.0))
+    assert hw.name == "A800"
+    # an all-A40 operator pool keeps A40 eligible
+    cluster2 = _small_cluster(("A40",))
+    ctrl2 = ReactivePoolController(scale_types=("A800", "A40"))
+    ctrl2.attach(Simulator(cluster2, make_router("least_request"), []))
+    assert ctrl2.pick_scale_up(cluster2.view(0.0)).name == "A40"
+
+
+def test_forecast_provisions_before_reactive_on_a_ramp():
+    """Under a steadily ramping arrival rate the trend forecast must
+    fire its first provision no later than the purely reactive policy
+    (that's the whole point of paying for a forecaster)."""
+    def ramp_reqs():
+        rng = np.random.default_rng(2)
+        arr = diurnal_arrivals(rng, 700, rps=11.0, period=360.0,
+                               amplitude=0.95)
+        return [Request(rid=i, family="sql", prompt="p", input_len=200,
+                        output_len=300, arrival=float(arr[i]), slo=60.0)
+                for i in range(len(arr))]
+
+    first = {}
+    for mode, cls in [("reactive", ReactivePoolController),
+                      ("forecast", ForecastPoolController)]:
+        cluster = _small_cluster(("A800",))
+        ctrl = cls(scale_types=("A800",), max_instances=5,
+                   interval=4.0, hi_load=8.0, warmup_override=20.0)
+        sim = Simulator(cluster, make_router("least_request"),
+                        ramp_reqs(), pool=ctrl)
+        sim.run()
+        provs = [t for t, a, _ in ctrl.events if a == "provision"]
+        assert provs, f"{mode} never scaled on the ramp"
+        first[mode] = provs[0]
+    assert first["forecast"] <= first["reactive"]
+
+
+# ---- admission control ------------------------------------------------------
+
+def _warmed_sim(router_name="least_request", predictor=None, n_inst=2,
+                admission=None, reqs=()):
+    cluster = _small_cluster(("A800",) * n_inst)
+    router = make_router(router_name, predictor=predictor)
+    sim = Simulator(cluster, router, reqs, admission=admission)
+    for i in range(n_inst):
+        e = cluster.estimator._get(i)
+        e.q, e.p, e.d, e.n_obs = 0.0, 1e-5, 0.02, 10
+    return sim, cluster
+
+
+def test_admission_sheds_doomed_admits_feasible():
+    adm = AdmissionController(ConstPredictor(200.0), margin=1.0)
+    feasible = Request(rid=0, family="sql", prompt="p", input_len=100,
+                       output_len=200, arrival=0.0, slo=30.0)
+    doomed = Request(rid=1, family="sql", prompt="p", input_len=100,
+                     output_len=200, arrival=0.0, slo=1.0)
+    sim, _ = _warmed_sim(admission=adm, reqs=[feasible, doomed])
+    out, _ = sim.run()
+    by_rid = {sr.req.rid: sr for sr in out}
+    # doomed: even the fastest instance needs 200 * 0.02 = 4s > 1s slack
+    assert by_rid[1].state == "failed"
+    assert by_rid[1].journey[-1][1] == "shed"
+    assert by_rid[0].state == "done"
+    assert adm.shed_log and adm.shed_log[0][1] == 1
+
+
+def test_admission_admits_everything_when_cold():
+    adm = AdmissionController(ConstPredictor(5000.0), margin=1.0)
+    req = Request(rid=0, family="sql", prompt="p", input_len=100,
+                  output_len=50, arrival=0.0, slo=0.01)
+    cluster = _small_cluster(("A800",))
+    sim = Simulator(cluster, make_router("least_request"), [req],
+                    admission=adm)
+    out, _ = sim.run()                       # no EMA observations yet
+    assert out[0].state == "done"
+
+
+def test_shedding_a_workflow_step_cascades_to_descendants():
+    """Shedding one DAG step fails the whole downstream subtree: those
+    steps never materialize, and the workflow resolves as violated."""
+    reqs, wfs = make_workflow_workload(n_workflows=6, rps=2.0, seed=3,
+                                       slo_scale=0.05)  # hopeless deadlines
+    adm = AdmissionController(ConstPredictor(400.0), margin=1.0)
+    cluster = _small_cluster(("A800", "A800"))
+    router = make_router("goodserve", predictor=ConstPredictor(400.0))
+    sim = Simulator(cluster, router, reqs, workflows=wfs, admission=adm)
+    for i in range(2):
+        e = cluster.estimator._get(i)
+        e.q, e.p, e.d, e.n_obs = 0.0, 1e-5, 0.03, 10
+    out, _ = sim.run()
+    assert all(sr.state in ("done", "failed") for sr in out)
+    shed = [sr for sr in out if sr.state == "failed"]
+    assert shed, "hopeless deadlines must shed"
+    # cascade: every descendant of a shed step is failed, not stuck
+    failed = {(sr.req.wid, sr.req.step) for sr in shed}
+    for sr in out:
+        if any((sr.req.wid, p) in failed for p in sr.req.parents):
+            assert sr.state == "failed"
+    # workflows with a shed step count as violations, not as lost
+    outcomes = workflow_outcomes(out)
+    assert set(outcomes) == {w.wid for w in wfs}
+    for sr in shed:
+        ok, _t = outcomes[sr.req.wid]
+        assert not ok
+
+
+# ---- cost metrics -----------------------------------------------------------
+
+def test_goodput_per_dollar_rewards_cheaper_pool():
+    done = []
+    for i in range(10):
+        r = Request(rid=i, family="sql", prompt="p", input_len=10,
+                    output_len=10, arrival=0.0, slo=100.0)
+        sr = type("S", (), {})()
+        sr.req, sr.finished_at, sr.state = r, 1.0, "done"
+        done.append(sr)
+    big = _small_cluster(("H800", "H800"))
+    small = _small_cluster(("A40",))
+    assert goodput_per_dollar(done, 3600.0, small) > \
+        goodput_per_dollar(done, 3600.0, big)
+
+
+def test_summarize_elastic_reports_cost_and_sheds():
+    reqs = make_workload(n=40, rps=20.0, seed=6)
+    cluster = _small_cluster(("A800", "A800"))
+    sim = Simulator(cluster, make_router("least_request"), reqs)
+    out, dur = sim.run()
+    s = summarize_elastic(out, dur, cluster)
+    assert s["cost_usd"] == pytest.approx(
+        2 * hwlib.GPUS["A800"].cost_per_hour * dur / 3600.0)
+    assert s["goodput_per_usd"] > 0
+    assert s["n_shed"] == 0
+    assert s["n_instances_total"] == 2

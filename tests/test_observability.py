@@ -1,0 +1,216 @@
+"""ClusterView/InstanceView snapshot API: correctness of the captured
+signals, instance lifecycle transitions, and the black-box contract —
+no router or controller code may read ``Instance.queue`` /
+``Instance.running`` directly (enforced by source scan)."""
+import os
+import re
+
+import numpy as np
+import pytest
+from conftest import ConstPredictor
+
+from repro.cluster import hardware as hwlib
+from repro.cluster.simulator import (Cluster, Instance, SimRequest,
+                                     Simulator, build_paper_cluster)
+from repro.cluster.workload import Request, make_workload, sample_request
+from repro.core.controller import ReactivePoolController
+from repro.core.router import ALL_BASELINES, make_router
+
+_SRC = os.path.join(os.path.dirname(__file__), "..", "src", "repro")
+
+
+# ---- the black-box contract, enforced by construction ----------------------
+
+@pytest.mark.parametrize("module", ["core/router.py", "core/controller.py"])
+def test_no_instance_internals_in_proxy_code(module):
+    """Routers and pool/admission controllers observe the cluster ONLY
+    through ClusterView — never Instance.queue / Instance.running."""
+    src = open(os.path.join(_SRC, module)).read()
+    for pattern in (r"\.queue\b", r"\.running\b", r"\.session_cache\b",
+                    r"\.prefix_cache\b"):
+        hits = [ln for ln in src.splitlines() if re.search(pattern, ln)]
+        assert not hits, f"{module} touches Instance internals: {hits}"
+
+
+def test_all_routers_still_route_via_views():
+    for cls in ALL_BASELINES:
+        cluster = build_paper_cluster()
+        router = cls()
+        reqs = [sample_request(np.random.default_rng(i), i)
+                for i in range(6)]
+        Simulator(cluster, router, reqs)
+        for r in reqs:
+            gid = router.route(SimRequest(req=r), 0.0)
+            assert 0 <= gid < len(cluster.instances)
+
+
+# ---- snapshot correctness ---------------------------------------------------
+
+def _cluster(n=3):
+    fp = hwlib.footprint("llama3.1-8b")
+    names = list(hwlib.GPUS)[:n]
+    return Cluster([Instance(i, hwlib.GPUS[names[i]], fp)
+                    for i in range(n)])
+
+
+def test_view_mirrors_queue_and_running_depths():
+    cluster = _cluster()
+    reqs = [sample_request(np.random.default_rng(i), i) for i in range(4)]
+    srs = [SimRequest(req=r) for r in reqs]
+    g = cluster.instances[1]
+    srs[0].enqueued_at = 2.0
+    srs[0].prefill_len = reqs[0].input_len
+    g.queue.append(srs[0])
+    srs[1].tokens_out = 7
+    g.running.append(srs[1])
+
+    v = cluster.view(t=5.0).view(1)
+    assert v.n_queued == 1 and v.n_running == 1 and v.pending == 2
+    assert v.queued_ages == (3.0,)
+    assert v.queued_prefill_tokens == (reqs[0].input_len,)
+    assert v.running_context_lens == (reqs[1].input_len + 7,)
+    assert v.mem_used_frac == g.mem_used_frac()
+    assert v.ema is cluster.estimator.snapshot(1)
+    # probes delegate to the instance's tables
+    g.note_prefix(reqs[2])
+    assert v.prefix_hit(reqs[2]) == g.prefix_hit(reqs[2])
+    # empty instance
+    v0 = cluster.view(t=5.0).view(0)
+    assert v0.pending == 0 and v0.newest_queued() is None \
+        and v0.longest_running() is None
+
+
+def test_view_migration_handles():
+    cluster = _cluster()
+    g = cluster.instances[0]
+    reqs = [sample_request(np.random.default_rng(i), i) for i in range(3)]
+    a, b, c = (SimRequest(req=r) for r in reqs)
+    g.queue.extend([a, b])
+    c.tokens_out = 50
+    g.running.append(c)
+    v = cluster.view(0.0).view(0)
+    assert v.newest_queued() is b
+    assert v.longest_running() is c
+
+
+def test_accepting_excludes_non_active_lifecycle_states():
+    cluster = _cluster()
+    cluster.instances[0].state = "draining"
+    cluster.instances[2].state = "provisioning"
+    cv = cluster.view(0.0)
+    assert [v.iid for v in cv.accepting()] == [1]
+    assert [v.iid for v in cv.draining()] == [0]
+    assert [v.iid for v in cv.warming()] == [2]
+    # every router only targets accepting instances
+    reqs = [sample_request(np.random.default_rng(i), i) for i in range(8)]
+    for cls in ALL_BASELINES:
+        router = cls()
+        Simulator(_cluster(), router, reqs)
+        router.sim.cluster.instances[0].state = "draining"
+        router.sim.cluster.instances[2].state = "provisioning"
+        for r in reqs:
+            assert router.route(SimRequest(req=r), 0.0) == 1
+
+
+# ---- lifecycle: provision -> warming -> active -> draining -> retired ------
+
+def test_provision_lifecycle_reaches_active_and_serves():
+    reqs = make_workload(n=40, rps=40.0, slo_scale=3.0, seed=1)
+    cluster = _cluster(2)
+    router = make_router("least_request")
+    sim = Simulator(cluster, router, reqs)
+    gid = sim.provision("A800", t=0.0, warmup_s=1.0)
+    g = cluster.instances[gid]
+    assert g.state == "provisioning" and not g.accepting
+    out, dur = sim.run()
+    assert g.state == "active" and g.accepting
+    assert g.started_at == 0.0
+    assert all(sr.state == "done" for sr in out)
+    # the joined instance actually served traffic
+    assert any(any(e[2] == gid for e in sr.journey) for sr in out)
+
+
+def test_drain_stops_admissions_and_retires_empty_instance():
+    cluster = _cluster(3)
+    router = make_router("least_request")
+    reqs = make_workload(n=30, rps=30.0, slo_scale=3.0, seed=2)
+    sim = Simulator(cluster, router, reqs)
+    assert sim.drain(2, t=0.0)
+    assert cluster.instances[2].state == "retired"   # empty: immediate
+    assert cluster.instances[2].retired_at == 0.0
+    out, _ = sim.run()
+    assert all(sr.state == "done" for sr in out)
+    for sr in out:
+        assert all(gid != 2 for (_, ev, gid) in sr.journey if ev == "enq")
+
+
+def test_failure_resubmission_falls_back_to_draining_capacity():
+    """If the last ACTIVE instance dies while another instance is still
+    draining (alive, finishing its work), victims must be resubmitted to
+    the draining instance instead of crashing on an empty target list."""
+    fp = hwlib.footprint("llama3.1-8b")
+    cluster = Cluster([Instance(0, hwlib.GPUS["A800"], fp),
+                       Instance(1, hwlib.GPUS["A800"], fp)])
+    reqs = [Request(rid=i, family="code", prompt="p", input_len=400,
+                    output_len=600, arrival=0.1 * i, slo=1e9)
+            for i in range(6)]
+    router = make_router("round_robin")
+    sim = Simulator(cluster, router, reqs, fail_at={0: 4.0})
+
+    class DrainThenWatch:
+        def attach(self, s): self.sim = s
+        def on_arrival(self, t): pass
+        def on_request_done(self, sr, t): pass
+        def on_tick(self, t):
+            if t >= 2.0 and cluster.instances[1].state == "active":
+                self.sim.drain(1, t)   # keeps running work: stays draining
+
+    sim.pool = DrainThenWatch()
+    sim.pool.attach(sim)
+    out, _ = sim.run()
+    assert not cluster.instances[0].alive
+    assert all(sr.state == "done" for sr in out)
+    # victims really landed on the draining instance
+    assert any(sr.journey[-1][2] == 1 for sr in out)
+
+
+def test_drain_refuses_last_accepting_instance():
+    cluster = _cluster(1)
+    router = make_router("least_request")
+    Simulator(cluster, router, [])
+    assert not router.sim.drain(0, t=0.0)
+    assert cluster.instances[0].state == "active"
+
+
+def test_cost_accounting_bills_provision_to_retire():
+    cluster = _cluster(2)
+    hw0, hw1 = (g.hw for g in cluster.instances)
+    router = make_router("least_request")
+    sim = Simulator(cluster, router, [])
+    gid = sim.provision("A800", t=100.0)
+    g = cluster.instances[gid]
+    g.state, g.retired_at = "retired", 1900.0
+    expect = (hw0.cost_per_hour + hw1.cost_per_hour) * 3600.0 / 3600.0 \
+        + hwlib.GPUS["A800"].cost_per_hour * 1800.0 / 3600.0
+    assert cluster.cost_usd(3600.0) == pytest.approx(expect)
+
+
+def test_controller_events_only_use_view_api(monkeypatch):
+    """A controller tick must not crash on a mixed-lifecycle pool and
+    must pick scale-down victims only among its own provisions."""
+    cluster = _cluster(3)
+    router = make_router("least_request")
+    sim = Simulator(cluster, router, [])
+    ctrl = ReactivePoolController(min_active=1, cooldown=1, interval=0.0)
+    ctrl.attach(sim)
+    # low pressure but nothing owned -> no drain
+    ctrl.on_tick(10.0)
+    assert all(g.state == "active" for g in cluster.instances)
+    # after provisioning, the owned instance is the drain candidate
+    view = cluster.view(0.0)
+    assert ctrl.pick_scale_down(view.active()) is None
+    gid = sim.provision("A800", t=0.0)
+    ctrl._owned.add(gid)
+    cluster.instances[gid].state = "active"
+    view = cluster.view(0.0)
+    assert ctrl.pick_scale_down(view.active()) == gid

@@ -67,9 +67,13 @@ def test_migration_preserves_progress_token_id():
     migrated = [sr for sr in out if sr.n_migrations > 0]
     for sr in migrated:
         assert sr.tokens_out == sr.req.output_len
-        # re-prefill happened at the target: journey has >= 2 'run' events
         runs = [e for e in sr.journey if e[1] == "run"]
-        assert len(runs) >= 2
+        enqs = [e for e in sr.journey if e[1] == "enq"]
+        assert len(enqs) >= 2 and len(runs) >= 1
+        # a request that was already decoding when it moved re-prefills
+        # (runs again) at the target; a queue-rescued one runs once
+        if runs[0][0] < enqs[-1][0]:
+            assert len(runs) >= 2
 
 
 def test_prefix_cache_hits_bounded_by_input():
