@@ -22,7 +22,7 @@ def main() -> None:
                             fig6_end_to_end, fig7_ablation, fig8_predictor,
                             fig9_migration, fig10_sensitivity,
                             fig11_overhead, fig12_workflows,
-                            fig13_autoscale, roofline)
+                            fig13_autoscale, fig14_spot, roofline)
 
     n_sim = 200 if args.fast else 400
     n_fig2 = 300 if args.fast else 600
@@ -46,6 +46,9 @@ def main() -> None:
         # fast mode halves the diurnal trace (first swell only): the
         # scale-up path is exercised, the trough-side drain is not
         "fig13": lambda: fig13_autoscale.run(n=1100 if args.fast else 2200),
+        # fast mode halves the trace; the preemption rate is per-hour, so
+        # the shorter span still sees eviction notices (asserted in-run)
+        "fig14": lambda: fig14_spot.run(n=1100 if args.fast else 2200),
         "roofline": lambda: roofline.run(),
     }
     only = [s for s in args.only.split(",") if s]

@@ -36,6 +36,11 @@ class HardwareSpec:
     cost_per_hour: float = 4.0   # on-demand $/hr for the whole instance
     warmup_s: float = 40.0       # provision + weight-load latency before
                                  # the instance can serve (elastic pool)
+    # -- spot/preemptible capacity -------------------------------------
+    is_spot: bool = False        # preemptible instance class
+    evictions_per_hour: float = 0.0  # Poisson rate of eviction notices
+                                     # while the instance is up
+    grace_s: float = 0.0         # notice -> kill window (evacuation time)
 
     @property
     def eff_flops(self) -> float:
@@ -68,6 +73,40 @@ GPUS = {
 }
 
 PAPER_CLUSTER = ("H800", "A800", "A40", "V100")
+
+# Spot capacity trades a deep discount for eviction risk: the provider
+# may reclaim the instance at any time, giving only a short grace notice.
+# Discount and notice window approximate public cloud spot terms (60-70%
+# off, 30 s - 2 min notice); the eviction rate is workload-visible churn,
+# not a provider SLA, so it is a knob.
+SPOT_DISCOUNT = 0.35         # spot $/hr as a fraction of on-demand
+SPOT_GRACE_S = 30.0          # provider notice -> kill window
+SPOT_EVICTIONS_PER_HOUR = 12.0
+
+
+def spot_variant(hw: HardwareSpec,
+                 discount: float = SPOT_DISCOUNT,
+                 evictions_per_hour: float = SPOT_EVICTIONS_PER_HOUR,
+                 grace_s: float = SPOT_GRACE_S) -> HardwareSpec:
+    """The preemptible twin of an on-demand catalog entry: identical
+    silicon, discounted $/hr, plus an eviction process."""
+    return dataclasses.replace(
+        hw, name=f"{hw.name}-spot",
+        cost_per_hour=hw.cost_per_hour * discount,
+        is_spot=True, evictions_per_hour=evictions_per_hour,
+        grace_s=grace_s)
+
+
+SPOT_GPUS = {f"{n}-spot": spot_variant(hw) for n, hw in GPUS.items()}
+
+
+def catalog(name: str) -> HardwareSpec:
+    """Resolve a catalog name — on-demand ("A800") or spot ("A800-spot")."""
+    if name in GPUS:
+        return GPUS[name]
+    if name in SPOT_GPUS:
+        return SPOT_GPUS[name]
+    raise KeyError(name)
 
 
 @dataclasses.dataclass(frozen=True)

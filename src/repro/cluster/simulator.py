@@ -61,6 +61,7 @@ class SimRequest:
     prefill_end: Optional[float] = None
     finished_at: Optional[float] = None
     n_migrations: int = 0
+    preempted: bool = False     # touched by a spot eviction at least once
     iters_since_check: int = 0
     pred_out: float = 0.0       # router's current output-length belief
     journey: list = dataclasses.field(default_factory=list)  # (t, event, gid)
@@ -87,7 +88,7 @@ def group_prefix_len(group: int) -> int:
 
 
 LIFECYCLE = ("provisioning", "warming", "active", "draining",
-             "retired", "failed")
+             "evicting", "retired", "failed", "evicted")
 
 
 class Instance:
@@ -107,6 +108,10 @@ class Instance:
         self.state = state
         self.started_at = started_at
         self.retired_at: Optional[float] = None
+        # spot preemption: absolute kill time once an eviction notice
+        # lands (state "evicting"); proxy-visible — the provider tells
+        # the instance, the instance tells the proxy
+        self.eviction_deadline: Optional[float] = None
         self.busy = False
         self.prefix_cache: OrderedDict = OrderedDict()
         self.prefix_capacity = prefix_capacity
@@ -216,14 +221,16 @@ class Cluster:
         self.instances.append(g)
         return g
 
+    @staticmethod
+    def instance_cost_usd(g: Instance, now: float) -> float:
+        """One instance's accrued bill: provision time until retirement
+        (or ``now``) — warmup is paid for too.  The single accrual rule;
+        every cost metric (total, spot share) must sum THIS."""
+        end = g.retired_at if g.retired_at is not None else now
+        return g.hw.cost_per_hour * max(end - g.started_at, 0.0) / 3600.0
+
     def cost_usd(self, now: float) -> float:
-        """Accrued pool cost: every instance bills from its provision
-        time until retirement (or ``now``) — warmup is paid for too."""
-        usd = 0.0
-        for g in self.instances:
-            end = g.retired_at if g.retired_at is not None else now
-            usd += g.hw.cost_per_hour * max(end - g.started_at, 0.0) / 3600.0
-        return usd
+        return sum(self.instance_cost_usd(g, now) for g in self.instances)
 
 
 class Simulator:
@@ -232,7 +239,8 @@ class Simulator:
                  fail_at: Optional[Dict[int, float]] = None,
                  max_time: float = 86400.0,
                  workflows: Optional[Sequence[Workflow]] = None,
-                 pool=None, admission=None):
+                 pool=None, admission=None,
+                 preemptions: bool = True, spot_seed: int = 0):
         self.cluster = cluster
         self.router = router
         self.requests = [SimRequest(req=r) for r in requests]
@@ -253,6 +261,21 @@ class Simulator:
         # request's state after every event
         self._n_terminal = 0
         self.migration_log: List[Tuple[float, int, int, float]] = []
+        # spot preemption injection: while a spot instance is up, eviction
+        # notices arrive as a Poisson process (hw.evictions_per_hour).
+        # Draws come from a per-instance stream seeded by (spot_seed,
+        # iid), NOT one shared stream in activation order — so instances
+        # the compared configurations have in common (the base pool) see
+        # IDENTICAL notice times regardless of what each router or
+        # controller does elsewhere in the pool.
+        self.preemptions = preemptions
+        self.spot_seed = spot_seed
+        self.eviction_log: List[Tuple[float, int]] = []   # (notice_t, gid)
+        self.n_evictions = 0                              # kills delivered
+        # kill victims with no live resubmission target while a
+        # replacement is still warming: parked here, resubmitted at the
+        # next join instead of being counted as lost
+        self._orphans: List[SimRequest] = []
         # DAG bookkeeping: a step materializes only when its parents have
         # completed (deferred arrival).  Structure comes from the requests
         # themselves; ``workflows`` adds descriptors for metrics.
@@ -328,7 +351,7 @@ class Simulator:
         ``hw.warmup_s`` (VM allocation + weight load; override with
         ``warmup_s``).  Billing starts now; routing starts at join."""
         if isinstance(hw, str):
-            hw = hwlib.GPUS[hw]
+            hw = hwlib.catalog(hw)
         fp = fp or self.cluster.instances[0].fp
         warm = hw.warmup_s if warmup_s is None else warmup_s
         g = self.cluster.add_instance(hw, fp, t)
@@ -367,10 +390,12 @@ class Simulator:
             g.retired_at = t
             g.busy = False
 
-    def _shed(self, sr: SimRequest, t: float):
-        """Admission rejection: fail the step now, and cascade to every
-        transitive child — a workflow missing one step can never meet
-        its deadline, so its remaining work is doomed too."""
+    def _shed(self, sr: SimRequest, t: float, tag: str = "shed"):
+        """Fail the step now, and cascade to every transitive child — a
+        workflow missing one step can never meet its deadline, so its
+        remaining work is doomed too.  ``tag`` distinguishes admission
+        rejection ("shed") from capacity loss ("lost") in the journey,
+        so metrics don't blame the AdmissionController for dead pools."""
         stack = [sr]
         while stack:
             s = stack.pop()
@@ -378,8 +403,43 @@ class Simulator:
                 continue
             s.state = "failed"
             self._n_terminal += 1
-            s.journey.append((round(t, 2), "shed", -1))
+            s.journey.append((round(t, 2), tag, -1))
             stack.extend(self._wf_children.get((s.req.wid, s.req.step), []))
+
+    def _submit(self, sr: SimRequest, t: float):
+        """Route an admitted arrival — or, when nothing in the pool can
+        take it, park it for warming capacity / fail it as lost.  Keeps
+        routers from being handed an empty target list after the whole
+        pool is reclaimed."""
+        if any(o.alive and o.state in ("active", "draining", "evicting")
+               for o in self.cluster.instances):
+            gid = self.router.route(sr, t)
+            self.enqueue(sr, gid, t)
+        elif any(o.state in ("provisioning", "warming")
+                 for o in self.cluster.instances):
+            self._orphans.append(sr)
+        else:
+            self._shed(sr, t, tag="lost")
+
+    def _dispose_orphans(self, t: float):
+        """Re-disposition parked requests whenever pool membership
+        changes: resubmit if something is alive again, keep waiting if a
+        replacement is still warming, fail as lost once nothing is —
+        without this, orphans whose warming rescuer dies pre-join would
+        hang as "pending" forever and the run would never terminate."""
+        orphans = [sr for sr in self._orphans if sr.state == "pending"]
+        self._orphans = []
+        if not orphans:
+            return
+        if any(o.alive and o.state in ("active", "draining", "evicting")
+               for o in self.cluster.instances):
+            self.router.on_failure(-1, orphans, t)
+        elif any(o.state in ("provisioning", "warming")
+                 for o in self.cluster.instances):
+            self._orphans = orphans
+        else:
+            for sr in orphans:
+                self._shed(sr, t, tag="lost")
 
     # -- engine model ---------------------------------------------------------
 
@@ -522,7 +582,99 @@ class Simulator:
         for sr in victims:
             sr.state = "pending"
             sr.instance = None
-        self.router.on_failure(gid, victims, t)
+        if victims:
+            if any(o.alive and o.state in ("active", "draining",
+                                           "evicting")
+                   for o in self.cluster.instances):
+                self.router.on_failure(gid, victims, t)
+            else:                   # park or lose, never crash the router
+                self._orphans.extend(victims)
+        self._dispose_orphans(t)
+
+    # -- spot preemption -----------------------------------------------------
+
+    def _arm_eviction(self, gid: int, t: float):
+        """Sample the eviction notice for a spot instance that just came
+        up: one draw from its own (spot_seed, iid) stream, so the same
+        instance draws the same notice offset in every compared run —
+        elastically provisioned instances get config-dependent iids (and
+        so config-dependent draws), but the shared base pool's
+        preemption trace is invariant across routers/controllers."""
+        g = self.cluster.instances[gid]
+        if (not self.preemptions or not g.hw.is_spot
+                or g.hw.evictions_per_hour <= 0):
+            return
+        rng = np.random.default_rng((self.spot_seed, gid))
+        dt = rng.exponential(3600.0 / g.hw.evictions_per_hour)
+        self._push(t + dt, "evict_notice", gid)
+
+    def _evict_notice(self, gid: int, t: float):
+        """Provider reclaims a spot instance: admissions stop NOW, the
+        kill lands after ``hw.grace_s``.  The grace window is spent
+        evacuating: queued work escapes as token IDs (it holds no GPU
+        state), running work takes the KV-vs-token-ID plan — KV only if
+        the transfer clears the machine before the kill AND wins the
+        end-to-end crossover for its context length."""
+        g = self.cluster.instances[gid]
+        if not g.alive or g.state not in ("active", "draining"):
+            return                     # already drained/retired/failed
+        g.state = "evicting"
+        g.eviction_deadline = t + g.hw.grace_s
+        self.eviction_log.append((t, gid))
+        self._push(g.eviction_deadline, "evict_kill", gid)
+        if self.pool is not None:
+            self.pool.on_eviction(gid, t)
+        # evacuation needs a surviving target: accepting, or at least an
+        # alive draining instance (it still finishes the work it holds —
+        # the same fallback failure resubmission uses)
+        if not any(o.accepting or (o.alive and o.state == "draining")
+                   for o in self.cluster.instances if o.iid != gid):
+            return                     # nowhere to go: ride out the grace
+        for sr in list(g.queue):
+            sr.preempted = True
+            sr.journey.append((round(t, 2), "evict", gid))
+            dst = self.router.route(sr, t)
+            self.migrate(sr, dst, t, mode="token_id")
+        for sr in list(g.running):
+            sr.preempted = True
+            sr.journey.append((round(t, 2), "evict", gid))
+            dst = self.router.route(sr, t)
+            mode = miglib.plan_evacuation(
+                self.cluster.net, self.cluster.instances[dst].hw, g.fp,
+                sr.context_len, g.eviction_deadline - t,
+                prefix_hit=self.cluster.instances[dst].prefix_hit(sr.req))
+            self.migrate(sr, dst, t, mode=mode)
+
+    def _evict_kill(self, gid: int, t: float):
+        g = self.cluster.instances[gid]
+        if not g.alive or g.state != "evicting":
+            return
+        g.alive = False
+        g.state = "evicted"
+        g.retired_at = t            # billing runs through the grace window
+        g.eviction_deadline = None
+        g.busy = False
+        self.n_evictions += 1
+        victims = list(g.queue) + list(g.running)
+        g.queue.clear()
+        g.running.clear()
+        for sr in victims:
+            sr.state = "pending"
+            sr.instance = None
+            sr.preempted = True
+            sr.journey.append((round(t, 2), "evict_kill", gid))
+        if victims:
+            if any(o.accepting or (o.alive and o.state in
+                                   ("draining", "evicting"))
+                   for o in self.cluster.instances):
+                self.router.on_failure(gid, victims, t)
+            else:
+                # park the victims: a replacement the controller bought
+                # at notice time may still be warming — _dispose_orphans
+                # resubmits at its join, or fails them as lost if
+                # nothing is coming
+                self._orphans.extend(victims)
+        self._dispose_orphans(t)
 
     # -- main loop -------------------------------------------------------------
 
@@ -533,6 +685,9 @@ class Simulator:
             self._push(sr.req.arrival, "arrival", sr)
         for gid, t in self.fail_at.items():
             self._push(t, "fail", gid)
+        for g in self.cluster.instances:    # pre-provisioned spot capacity
+            if g.state == "active":
+                self._arm_eviction(g.iid, g.started_at)
         tick = 0.25
         self._push(tick, "tick", None)
 
@@ -551,18 +706,31 @@ class Simulator:
                         and not self.admission.admit(sr, t)):
                     self._shed(sr, t)
                 else:
-                    gid = self.router.route(sr, t)
-                    self.enqueue(sr, gid, t)
+                    self._submit(sr, t)
             elif kind == "step":
                 self._step(payload, t)
             elif kind == "migrate_arrive":
                 sr, dst, skip = payload
-                if not self.cluster.instances[dst].accepting:
-                    dst = self.router.route(sr, t)
-                    skip = False
-                self.enqueue(sr, dst, t, skip_prefill=skip)
+                g = self.cluster.instances[dst]
+                # a draining/evicting target still finishes what it
+                # holds (evacuations may land there when nothing is
+                # accepting); a dead/retired one forces a re-route —
+                # which invalidates any KV that travelled — through the
+                # same park-or-lose fallback as arrivals, since the
+                # whole pool may have died during the transfer
+                if g.accepting or (g.alive and g.state in
+                                   ("draining", "evicting")):
+                    self.enqueue(sr, dst, t, skip_prefill=skip)
+                else:
+                    sr.state = "pending"
+                    sr.instance = None
+                    self._submit(sr, t)
             elif kind == "fail":
                 self._fail_instance(payload, t)
+            elif kind == "evict_notice":
+                self._evict_notice(payload, t)
+            elif kind == "evict_kill":
+                self._evict_kill(payload, t)
             elif kind == "warming":
                 g = self.cluster.instances[payload]
                 if g.state == "provisioning":
@@ -571,7 +739,9 @@ class Simulator:
                 g = self.cluster.instances[payload]
                 if g.state in ("provisioning", "warming"):
                     g.state = "active"
+                    self._arm_eviction(g.iid, t)
                     self.router.on_instance_join(g.iid, t)
+                    self._dispose_orphans(t)
             elif kind == "tick":
                 self.router.on_tick(t)
                 if self.pool is not None:

@@ -69,6 +69,9 @@ class Request:
     output_len: int           # ground truth (hidden from the router)
     arrival: float
     slo: float = 0.0          # absolute E2E deadline duration (seconds)
+    tier: str = ""            # SLO tier ("tight"/"relaxed") when the
+                              # workload draws per-request slack ranges —
+                              # lets spot benchmarks attribute violations
     prefix_group: int = 0     # shared-prompt-prefix group (for prefix cache)
     # -- agentic-workflow structure (visible to routers; lengths are not) --
     wid: int = -1             # workflow id (-1 = standalone request)
@@ -218,8 +221,12 @@ def make_workload(n: int = 600, rps: float = 10.0, slo_scale=2.0,
     # measured per request (temperature 0 => deterministic lengths)
     for r, a in zip(reqs, arr):
         r.arrival = float(a)
-        scale = (rng.uniform(*slo_scale) if isinstance(slo_scale, tuple)
-                 else slo_scale)
+        if isinstance(slo_scale, tuple):
+            scale = rng.uniform(*slo_scale)
+            r.tier = ("tight" if scale < sum(slo_scale) / 2.0
+                      else "relaxed")
+        else:
+            scale = slo_scale
         r.slo = solo_latency(ref, fp, r) * scale
     return reqs
 

@@ -56,6 +56,11 @@ class PoolController:
     def on_tick(self, t: float):
         pass
 
+    def on_eviction(self, gid: int, t: float):
+        """A spot instance received its eviction notice (grace window
+        just opened)."""
+        pass
+
     def _log(self, t: float, action: str, detail: str):
         self.events.append((t, action, detail))
 
@@ -89,9 +94,20 @@ class ReactivePoolController(PoolController):
                  lo_pending: float = 1.5, cooldown: int = 4,
                  protect_base: bool = True,
                  warmup_override: Optional[float] = None,
-                 max_warming: int = 1):
+                 max_warming: int = 1,
+                 spot_types: Sequence = (), max_spot: int = 4,
+                 replace_evicted: bool = True):
         super().__init__()
         self.scale_types = tuple(scale_types)
+        # spot-aware elasticity: scale-up prefers preemptible capacity
+        # (it's the cheap marginal unit — the paper's goodput-per-$ is
+        # won at the margin) up to ``max_spot`` concurrently, keeping the
+        # on-demand base pool as the protected floor; an eviction notice
+        # triggers an immediate replacement provision so the new
+        # instance's warmup hides inside the dying one's grace window.
+        self.spot_types = tuple(spot_types)
+        self.max_spot = max_spot
+        self.replace_evicted = replace_evicted
         self.max_instances = max_instances
         self.min_active = min_active
         self.interval = interval
@@ -115,25 +131,43 @@ class ReactivePoolController(PoolController):
     min_bw_frac = 0.5   # don't buy types <50% of the pool's fastest: too
                         # slow to meet the SLOs the fast tier was sized for
 
-    def _catalog(self) -> List[hwlib.HardwareSpec]:
-        """scale_types entries are catalog names OR full HardwareSpecs —
-        the latter lets the operator provision the same engine config
-        (max_seqs etc.) as the base pool, not the stock catalog entry."""
-        return [hwlib.GPUS[n] if isinstance(n, str) else n
-                for n in self.scale_types]
+    @staticmethod
+    def _resolve(types) -> List[hwlib.HardwareSpec]:
+        """Entries are catalog names OR full HardwareSpecs — the latter
+        lets the operator provision the same engine config (max_seqs
+        etc.) as the base pool, not the stock catalog entry."""
+        return [hwlib.catalog(n) if isinstance(n, str) else n
+                for n in types]
 
-    def pick_scale_up(self, view=None) -> hwlib.HardwareSpec:
+    def _catalog(self) -> List[hwlib.HardwareSpec]:
+        return self._resolve(self.scale_types)
+
+    def _pick(self, cands, view) -> hwlib.HardwareSpec:
         """Most cost-effective capacity: decode bandwidth per dollar,
         among catalog types fast enough relative to the current pool
         (a dirt-cheap GPU that can't hit the SLO is negative goodput:
         every request routed there is a likely miss)."""
-        cands = self._catalog()
         if view is not None and view.active():
             fastest = max(v.hw.eff_bw for v in view.active())
             fast_enough = [hw for hw in cands
                            if hw.eff_bw >= self.min_bw_frac * fastest]
             cands = fast_enough or cands
         return max(cands, key=lambda hw: hw.eff_bw / hw.cost_per_hour)
+
+    def _n_spot(self, view) -> int:
+        """Preemptible instances up or on the way (active + warming)."""
+        if view is None:
+            return 0
+        return sum(1 for v in view.active() + view.warming() if v.is_spot)
+
+    def pick_scale_up(self, view=None) -> hwlib.HardwareSpec:
+        """Prefer spot capacity at the margin (deep discount dominates
+        bandwidth/$) while the concurrent-spot cap leaves room; the
+        on-demand catalog is the fallback — and the protected base pool
+        stays on-demand throughout."""
+        if self.spot_types and self._n_spot(view) < self.max_spot:
+            return self._pick(self._resolve(self.spot_types), view)
+        return self._pick(self._catalog(), view)
 
     def pick_scale_down(self, active) -> Optional[int]:
         """Worst goodput-per-dollar elastic instance: slowest measured
@@ -167,6 +201,29 @@ class ReactivePoolController(PoolController):
         view = self.sim.cluster.view(t)
         up, down = self._signals(view, t)
         self._decide(view, up, down, t)
+
+    def on_eviction(self, gid: int, t: float):
+        """Replace reclaimed spot capacity the moment the notice lands:
+        provisioning inside the grace window means the replacement's
+        warmup overlaps the victim's drain-down instead of following it.
+        The replacement is bought through the normal picker, so it is
+        spot again while the cap allows (churn is priced in) and
+        on-demand past it."""
+        if not self.replace_evicted:
+            return
+        view = self.sim.cluster.view(t)
+        victim = view.view(gid)
+        if not victim.is_spot:
+            return
+        n_pool = len(view.active()) + len(view.warming())
+        if n_pool >= self.max_instances:
+            return
+        if len(view.warming()) >= self.max_warming + 1:
+            return   # replacement may exceed the stampede cap by one
+        hw = self.pick_scale_up(view)
+        new_gid = self.sim.provision(hw, t, warmup_s=self.warmup_override)
+        self._owned.add(new_gid)
+        self._log(t, "replace", f"{hw.name}#{new_gid} for evicted #{gid}")
 
     def _decide(self, view, up: float, down: float, t: float):
         active, warming = view.active(), view.warming()

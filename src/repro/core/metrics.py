@@ -113,16 +113,45 @@ def workflow_goodput_per_dollar(finished, duration: float,
     return good / max(cluster_cost_usd(cluster, duration), 1e-9)
 
 
+def spot_cost_usd(cluster, duration: float) -> float:
+    """The preemptible share of the pool bill (same accrual rule as
+    ``cluster.cost_usd``, filtered to spot instances)."""
+    return sum(cluster.instance_cost_usd(g, duration)
+               for g in cluster.instances if g.hw.is_spot)
+
+
+def preemption_violations(finished) -> int:
+    """SLO violations among requests a spot eviction touched (evacuated
+    in the grace window or killed outright) — the price of the discount,
+    which goodput-per-$ must beat."""
+    return sum(1 for r in finished
+               if getattr(r, "preempted", False)
+               and (r.finished_at is None
+                    or (r.finished_at - r.req.arrival) > r.req.slo))
+
+
 def summarize_elastic(finished, duration: float, cluster) -> dict:
-    """Request-level summary extended with pool-cost accounting."""
+    """Request-level summary extended with pool-cost accounting and
+    spot-preemption attribution."""
     s = summarize(finished, duration)
     states = [g.state for g in cluster.instances]
     s.update({
         "cost_usd": cluster_cost_usd(cluster, duration),
+        "spot_cost_usd": spot_cost_usd(cluster, duration),
         "goodput_per_usd": goodput_per_dollar(finished, duration, cluster),
-        "n_shed": sum(1 for r in finished if r.state == "failed"),
+        # "shed" = the AdmissionController rejected it; "lost" = the
+        # pool's capacity died under it (eviction/failure, no survivor)
+        "n_shed": sum(1 for r in finished if r.state == "failed"
+                      and any(e[1] == "shed" for e in r.journey)),
+        "n_lost": sum(1 for r in finished if r.state == "failed"
+                      and not any(e[1] == "shed" for e in r.journey)),
         "n_instances_total": len(states),
-        "n_retired": sum(1 for st in states if st in ("retired", "failed")),
+        "n_retired": sum(1 for st in states
+                         if st in ("retired", "failed", "evicted")),
+        "n_evicted_instances": sum(1 for st in states if st == "evicted"),
+        "n_preempted": sum(1 for r in finished
+                           if getattr(r, "preempted", False)),
+        "preempt_violations": preemption_violations(finished),
     })
     return s
 

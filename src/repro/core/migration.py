@@ -67,6 +67,27 @@ def kv_cache_migration_latency(net: NetworkSpec, fp,
     return kv_transfer_latency(net, fp, context_len)
 
 
+def plan_evacuation(net: NetworkSpec, hw_dst, fp, context_len: int,
+                    grace_remaining_s: float,
+                    prefix_hit: int = 0) -> str:
+    """Escape mode for a running request on an instance that received an
+    eviction notice: its KV state must leave the machine within the
+    grace window or be lost.
+
+    Token-ID always escapes (the payload is a few KB), but re-prefilling
+    at the target costs compute the crossover model prices.  Ship the KV
+    cache iff (a) the transfer itself clears the dying machine before
+    the kill — a half-shipped KV cache is worthless — and (b) it is the
+    cheaper end-to-end path for this context on this link.  Queued work
+    holds no KV state and always escapes as token IDs."""
+    kv_exit = kv_transfer_latency(net, fp, context_len)
+    if kv_exit > max(grace_remaining_s, 0.0):
+        return "token_id"
+    tok_e2e = token_id_migration_latency(net, hw_dst, fp, context_len,
+                                         prefix_hit)
+    return "kv" if kv_exit <= tok_e2e else "token_id"
+
+
 def transfer_crossover_context(net: NetworkSpec, hw_dst, fp,
                                hi: int = 1 << 18) -> Optional[int]:
     """Smallest context length at which token-ID migration (transfer +

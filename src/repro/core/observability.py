@@ -46,7 +46,8 @@ class InstanceView:
     Views are per-decision ephemera; don't hold one across simulated
     time."""
     iid: int
-    state: str                 # provisioning|warming|active|draining|retired|failed
+    state: str                 # provisioning|warming|active|draining|
+                               # evicting|retired|failed|evicted
     alive: bool
     accepting: bool            # may receive new admissions
     n_queued: int
@@ -55,6 +56,9 @@ class InstanceView:
     ema: InstanceEstimate      # (q, p, d, n_obs) capability estimates
     hw: hwlib.HardwareSpec
     fp: hwlib.ModelFootprint
+    # spot preemption: the provider notifies the instance, the instance
+    # notifies the proxy — both facts are proxy-visible
+    eviction_deadline: float = None   # absolute kill time while evicting
     _inst: object = dataclasses.field(repr=False, compare=False, default=None)
 
     @property
@@ -64,6 +68,11 @@ class InstanceView:
     @property
     def cost_per_hour(self) -> float:
         return self.hw.cost_per_hour
+
+    @property
+    def is_spot(self) -> bool:
+        """Preemptible capacity (operator catalog fact)."""
+        return self.hw.is_spot
 
     @cached_property
     def tpm(self) -> float:
@@ -131,7 +140,8 @@ class ClusterView:
                 accepting=g.accepting,
                 n_queued=len(g.queue), n_running=len(g.running),
                 t=t, ema=cluster.estimator.snapshot(g.iid),
-                hw=g.hw, fp=g.fp, _inst=g))
+                hw=g.hw, fp=g.fp,
+                eviction_deadline=g.eviction_deadline, _inst=g))
         return cls(views)
 
     def view(self, iid: int) -> InstanceView:
@@ -151,6 +161,15 @@ class ClusterView:
 
     def draining(self) -> List[InstanceView]:
         return [v for v in self.instances if v.state == "draining"]
+
+    def evicting(self) -> List[InstanceView]:
+        """Spot instances in their eviction-grace window."""
+        return [v for v in self.instances if v.state == "evicting"]
+
+    def spot(self) -> List[InstanceView]:
+        """Preemptible instances currently serving (active spot)."""
+        return [v for v in self.instances
+                if v.is_spot and v.alive and v.state == "active"]
 
     def total_pending(self) -> int:
         return sum(v.pending for v in self.accepting())

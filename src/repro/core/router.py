@@ -20,6 +20,7 @@ import numpy as np
 
 from repro.cluster import hardware as hwlib
 from repro.cluster.simulator import SimRequest, Simulator
+from repro.core import migration as miglib
 from repro.core.observability import ClusterView, InstanceView
 
 
@@ -58,15 +59,22 @@ class Router:
     def targets(self, t: float) -> List[InstanceView]:
         """Instances currently accepting admissions, in iid order.  When
         admission is closed everywhere (e.g. the last active instance
-        just failed while others drain), fall back to alive draining
-        instances — stranding work on an empty target list would crash
-        failure resubmission."""
+        just failed while others drain, or every spot instance is in an
+        overlapping eviction-grace window), fall back to alive
+        draining/evicting instances — stranding work on an empty target
+        list would crash failure resubmission, and an evicting instance
+        still serves for its grace window (its stragglers are
+        resubmitted at the kill)."""
         cv = self.view(t)
         views = cv.accepting()
         if views:
             return views
+        drain = [v for v in cv.instances
+                 if v.alive and v.state == "draining"]
+        if drain:
+            return drain
         return [v for v in cv.instances
-                if v.alive and v.state == "draining"]
+                if v.alive and v.state == "evicting"]
 
     # -- interface ----------------------------------------------------------
 
@@ -212,11 +220,16 @@ class GoodServeRouter(Router):
     name = "goodserve"
 
     def __init__(self, predictor, seed: int = 0, enable_migration: bool = True,
-                 migration_mode: str = "token_id", margin: float = 0.7):
+                 migration_mode: str = "token_id", margin: float = 0.7,
+                 spot_aware: bool = True):
         super().__init__(seed)
         self.predictor = predictor
         self.enable_migration = enable_migration
         self.migration_mode = migration_mode
+        # charge preemptible instances an eviction-risk surcharge in the
+        # FEASIBILITY test (spot_aware=False is the spot-oblivious
+        # ablation: identical policy, risk term zeroed)
+        self.spot_aware = spot_aware
         self._rr_cold = 0   # instance state: cold-start round-robin cursor
         # feasibility margin: T <= margin * slack.  The EMA estimates lag a
         # growing batch and exclude this request's own interference, so
@@ -304,6 +317,26 @@ class GoodServeRouter(Router):
         drain = v.ema.p * sum(v.queued_prefill_tokens)
         return max(v.ema.q, live + drain, self._slot_wait(v, t)) + inflight
 
+    def _eviction_risk(self, v: InstanceView, horizon: float,
+                       context_len: float) -> float:
+        """Expected latency surcharge for parking a request on
+        preemptible capacity: P(eviction notice lands during the
+        request's ~``horizon`` residence) x the recovery detour (escape
+        transfer, renewed queueing, and a likely re-prefill of the
+        context elsewhere).  Charged against the FEASIBILITY test only —
+        like ``_queue_uncertainty`` — so tight-slack requests keep off
+        spot while the best-effort fallback ranking stays unpenalized
+        and long-tail work soaks up the discounted capacity."""
+        if not self.spot_aware or not v.is_spot:
+            return 0.0
+        rate = v.hw.evictions_per_hour / 3600.0
+        if rate <= 0.0:
+            return 0.0
+        p_evict = 1.0 - float(np.exp(-rate * max(horizon, 0.0)))
+        recovery = (miglib.FIXED_OVERHEAD_S + v.ema.q
+                    + v.ema.p * max(context_len, 0.0))
+        return p_evict * recovery
+
     def _latencies(self, sr: SimRequest, views, remaining_out: float,
                    context_len: int, t: float):
         """Vectorized T(r,g) over candidate instance views (Eq. 2)."""
@@ -337,7 +370,10 @@ class GoodServeRouter(Router):
         down = self._downstream_steps(sr)
         R = T + down * d * sr.pred_out
         unc = np.array([self._queue_uncertainty(v, t) for v in views])
-        feasible = np.nonzero(R + unc <= self.margin * slack)[0]
+        ctx = sr.req.input_len + sr.pred_out
+        risk = np.array([self._eviction_risk(v, float(T[i]), ctx)
+                         for i, v in enumerate(views)])
+        feasible = np.nonzero(R + unc + risk <= self.margin * slack)[0]
         if feasible.size:                       # just-enough: slowest feasible
             if sr.req.session >= 0:
                 # prefer the instance holding the session's cached prefix
@@ -394,7 +430,13 @@ class GoodServeRouter(Router):
             return
         T, d = self._latencies(sr, views, remaining, sr.context_len, t)
         R = T + down * d * total_pred
-        feasible = np.nonzero(R <= self.margin * slack)[0]
+        # same eviction-risk surcharge as the admission path: a rescue
+        # that parks a tight request on spot just trades one miss cause
+        # for another
+        risk = np.array([self._eviction_risk(
+            v, float(T[i]), sr.context_len + remaining)
+            for i, v in enumerate(views)])
+        feasible = np.nonzero(R + risk <= self.margin * slack)[0]
         if feasible.size:
             k = int(feasible[np.argmax(d[feasible])])
         else:

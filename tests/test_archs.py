@@ -17,6 +17,10 @@ from repro.training.train_step import make_train_step
 
 KEY = jax.random.PRNGKey(0)
 
+# Full forward/train/decode over every arch dominates the tier-1 wall
+# clock; the param-count checks below stay in the default run.
+slow = pytest.mark.slow
+
 
 def _inputs(cfg, B=2, S=24):
     n_pre = cfg.n_prefix_embeds
@@ -26,6 +30,7 @@ def _inputs(cfg, B=2, S=24):
     return toks, pre
 
 
+@slow
 @pytest.mark.parametrize("arch", ALL_ARCHS)
 def test_forward_and_decode_consistency(arch):
     cfg = reduce_config(get_config(arch))
@@ -49,6 +54,7 @@ def test_forward_and_decode_consistency(arch):
                                rtol=2e-3, atol=2e-3)
 
 
+@slow
 @pytest.mark.parametrize("arch", ALL_ARCHS)
 def test_train_step_runs_and_is_finite(arch):
     cfg = reduce_config(get_config(arch))
@@ -72,6 +78,7 @@ def test_train_step_runs_and_is_finite(arch):
     assert delta > 0
 
 
+@slow
 def test_multi_token_decode_matches_teacher_forcing():
     cfg = reduce_config(get_config("jamba-v0.1-52b"))
     params = init_params(cfg, KEY, dtype=jnp.float32)

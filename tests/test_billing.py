@@ -1,0 +1,127 @@
+"""Billing invariants under pool churn (property tests via the
+hypothesis shim in tests/_hyp.py).
+
+`Cluster.cost_usd(now)` is the denominator of goodput-per-$ — every
+elastic/spot benchmark conclusion rides on it.  Three properties, under
+random provision/drain/preempt histories:
+
+  * cost is monotone non-decreasing in ``now`` (and never negative),
+  * a retired/evicted instance stops accruing: once the whole pool is
+    down the bill is flat forever,
+  * a spot instance never bills more than its on-demand twin over any
+    provision -> kill interval (the discount is real, not an artifact
+    of when the kill lands).
+"""
+from _hyp import given, settings, st
+import pytest
+
+from repro.cluster import hardware as hwlib
+from repro.cluster.simulator import Cluster, Instance, Simulator
+from repro.cluster.workload import Request
+from repro.core.router import make_router
+
+FP = hwlib.footprint("llama3.1-8b")
+HW_NAMES = ("A800", "A40", "H800", "V100")
+
+OPS = st.lists(
+    st.tuples(st.floats(min_value=0.0, max_value=500.0),
+              st.sampled_from(("provision", "drain", "preempt")),
+              st.integers(min_value=0, max_value=7)),
+    min_size=0, max_size=14)
+
+
+def _apply_churn(ops):
+    """Replay a random lifecycle history: provisions (on-demand or spot,
+    by parity of the pick), drains (-> retired) and preemptions
+    (-> evicted) of arbitrary live instances at increasing times."""
+    cluster = Cluster([Instance(0, hwlib.GPUS["A800"], FP)])
+    now = 0.0
+    for dt, action, pick in ops:
+        now += dt
+        if action == "provision":
+            base = hwlib.GPUS[HW_NAMES[pick % len(HW_NAMES)]]
+            hw = base if pick % 2 == 0 else hwlib.spot_variant(base)
+            g = cluster.add_instance(hw, FP, now)
+            g.state = "active"
+        else:
+            live = [g for g in cluster.instances if g.retired_at is None]
+            if not live:
+                continue
+            g = live[pick % len(live)]
+            g.state = "retired" if action == "drain" else "evicted"
+            g.retired_at = now
+            if action == "preempt":
+                g.alive = False
+    return cluster, now
+
+
+@settings(max_examples=40, deadline=None)
+@given(ops=OPS, probes=st.lists(st.floats(min_value=0.0, max_value=4000.0),
+                                min_size=2, max_size=8))
+def test_cost_monotone_in_now_under_churn(ops, probes):
+    cluster, _end = _apply_churn(ops)
+    costs = [cluster.cost_usd(t) for t in sorted(probes)]
+    assert all(c >= 0.0 for c in costs)
+    for lo, hi in zip(costs, costs[1:]):
+        assert hi >= lo - 1e-12
+
+
+@settings(max_examples=40, deadline=None)
+@given(ops=OPS, after=st.floats(min_value=0.0, max_value=1e6))
+def test_cost_flat_once_every_instance_is_down(ops, after):
+    cluster, end = _apply_churn(ops)
+    for g in cluster.instances:          # kill any survivors at ``end``
+        if g.retired_at is None:
+            g.state = "retired"
+            g.retired_at = end
+    assert cluster.cost_usd(end + after) == \
+        pytest.approx(cluster.cost_usd(end))
+
+
+@settings(max_examples=40, deadline=None)
+@given(name=st.sampled_from(HW_NAMES),
+       t0=st.floats(min_value=0.0, max_value=1000.0),
+       dur=st.floats(min_value=0.0, max_value=5000.0),
+       discount=st.floats(min_value=0.05, max_value=1.0))
+def test_spot_never_bills_more_than_on_demand_twin(name, t0, dur, discount):
+    base = hwlib.GPUS[name]
+    spot = hwlib.spot_variant(base, discount=discount)
+    bills = []
+    for hw in (spot, base):
+        cluster = Cluster([])
+        g = cluster.add_instance(hw, FP, t0)
+        g.state, g.retired_at = "evicted" if hw.is_spot else "retired", \
+            t0 + dur
+        bills.append(cluster.cost_usd(t0 + 2 * dur + 1.0))
+    assert bills[0] <= bills[1] + 1e-12
+    assert bills[0] == pytest.approx(bills[1] * discount)
+
+
+@settings(max_examples=6, deadline=None)
+@given(seed=st.integers(min_value=0, max_value=10_000),
+       rate=st.floats(min_value=600.0, max_value=3600.0))
+def test_simulated_spot_churn_keeps_billing_monotone(seed, rate):
+    """End-to-end: a preempted pool's bill, probed mid-run and at
+    several horizons past the end, is monotone, and the evicted spot
+    instance's final bill equals rate x uptime exactly."""
+    spot = hwlib.spot_variant(hwlib.GPUS["A800"], evictions_per_hour=rate,
+                              grace_s=1.0)
+    cluster = Cluster([Instance(0, hwlib.GPUS["A800"], FP),
+                       Instance(1, spot, FP)])
+    reqs = [Request(rid=i, family="code", prompt="p", input_len=300,
+                    output_len=400, arrival=0.05 * i, slo=1e9)
+            for i in range(12)]
+    sim = Simulator(cluster, make_router("round_robin"), reqs,
+                    spot_seed=seed)
+    out, dur = sim.run()
+    assert all(sr.state == "done" for sr in out)
+    probes = [0.0, dur / 3, dur, dur + 50.0, dur + 1e4]
+    costs = [cluster.cost_usd(t) for t in probes]
+    assert costs == sorted(costs)
+    g = cluster.instances[1]
+    if g.state == "evicted":
+        uptime = g.retired_at - g.started_at
+        expect = spot.cost_per_hour * uptime / 3600.0
+        spot_bill = cluster.cost_usd(dur) - \
+            cluster.instances[0].hw.cost_per_hour * dur / 3600.0
+        assert spot_bill == pytest.approx(expect)

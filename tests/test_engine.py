@@ -34,6 +34,7 @@ def test_engine_serves_batched_requests(engine):
         assert len(r.generated) >= 1
 
 
+@pytest.mark.slow
 def test_engine_matches_teacher_forcing():
     cfg = reduce_config(get_config("llama3.1-8b"))
     eng = InferenceEngine(cfg, max_batch=2, max_len=48, seed=3)

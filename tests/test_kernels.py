@@ -12,6 +12,9 @@ from repro.kernels.paged_attention.ref import paged_attention_ref
 from repro.kernels.ssd.ops import ssd
 from repro.kernels.ssd.ref import ssd_ref
 
+# Pallas-kernel numerics: heavy JAX compiles, opt-in via the full run
+pytestmark = pytest.mark.slow
+
 KEY = jax.random.PRNGKey(0)
 
 

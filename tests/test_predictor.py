@@ -39,6 +39,7 @@ def test_paper_scale_param_count():
     assert abs(n - 45.1e6) / 45.1e6 < 0.03, n / 1e6
 
 
+@pytest.mark.slow
 def test_moe_beats_untrained_and_history(moe, corpus, test_set):
     truth = np.array([r.output_len for r in test_set], np.float32)
     mae_moe = evaluate_mae(moe.predict_requests(test_set), truth)
@@ -49,11 +50,13 @@ def test_moe_beats_untrained_and_history(moe, corpus, test_set):
     assert mae_moe < mae_hist * 1.25    # at least competitive w/ history
 
 
+@pytest.mark.slow
 def test_predictions_positive_and_finite(moe, test_set):
     preds = moe.predict_requests(test_set)
     assert np.isfinite(preds).all() and (preds >= 1.0).all()
 
 
+@pytest.mark.slow
 def test_repredict_with_generated_tokens(moe, test_set):
     """Sec. 3.4: mid-request re-prediction takes generated-so-far."""
     r = test_set[0]
@@ -62,6 +65,7 @@ def test_repredict_with_generated_tokens(moe, test_set):
     assert np.isfinite(a).all() and np.isfinite(b).all()
 
 
+@pytest.mark.slow
 def test_single_mlp_and_proxy_train(corpus, test_set):
     truth = np.array([r.output_len for r in test_set], np.float32)
     mlp = SingleMLPPredictor().fit(corpus, epochs=6, lr=1e-3)

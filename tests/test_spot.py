@@ -1,0 +1,438 @@
+"""Spot/preemptible instance pool: eviction lifecycle, grace-window
+KV-vs-token-ID evacuation, proxy-visible spot signals, controller
+replacement, and GoodServe's eviction-risk feasibility penalty."""
+import numpy as np
+import pytest
+from conftest import ConstPredictor
+
+from repro.cluster import hardware as hwlib
+from repro.cluster.simulator import Cluster, Instance, Simulator
+from repro.cluster.workload import Request
+from repro.core import migration as miglib
+from repro.core.controller import ReactivePoolController
+from repro.core.router import make_router
+
+FP = hwlib.footprint("llama3.1-8b")
+
+
+def _spot(name="A800", rate=60.0, grace=10.0) -> hwlib.HardwareSpec:
+    return hwlib.spot_variant(hwlib.GPUS[name], evictions_per_hour=rate,
+                              grace_s=grace)
+
+
+def _reqs(n, input_len=400, output_len=500, slo=1e9, dt=0.05):
+    return [Request(rid=i, family="code", prompt="p", input_len=input_len,
+                    output_len=output_len, arrival=dt * i, slo=slo)
+            for i in range(n)]
+
+
+# ---- catalog ----------------------------------------------------------------
+
+def test_spot_variant_discounts_and_resolves():
+    base = hwlib.GPUS["A800"]
+    s = hwlib.spot_variant(base)
+    assert s.is_spot and not base.is_spot
+    assert s.name == "A800-spot"
+    assert s.cost_per_hour < base.cost_per_hour
+    assert s.grace_s > 0 and s.evictions_per_hour > 0
+    # silicon is identical: only the commercial terms differ
+    assert (s.tflops, s.hbm_gbps, s.mem_gb) == \
+        (base.tflops, base.hbm_gbps, base.mem_gb)
+    assert hwlib.catalog("A800-spot") == hwlib.SPOT_GPUS["A800-spot"]
+    assert hwlib.catalog("A800") == base
+
+
+# ---- evacuation planning ----------------------------------------------------
+
+def test_plan_evacuation_uses_crossover_inside_grace():
+    """With plenty of grace the plan follows the end-to-end crossover:
+    KV below it, token-ID above (the Fig. 9 trade-off)."""
+    net, hw = miglib.ETHERNET_10G, hwlib.GPUS["A800"]
+    x = miglib.transfer_crossover_context(net, hw, FP)
+    assert x is not None
+    assert miglib.plan_evacuation(net, hw, FP, max(x // 4, 1),
+                                  grace_remaining_s=1e9) == "kv"
+    assert miglib.plan_evacuation(net, hw, FP, 4 * x,
+                                  grace_remaining_s=1e9) == "token_id"
+
+
+def test_plan_evacuation_rejects_kv_that_misses_the_kill():
+    """A KV transfer that cannot clear the machine before the kill is
+    worthless mid-flight — token-ID always escapes."""
+    net, hw = miglib.ETHERNET_10G, hwlib.GPUS["A800"]
+    x = miglib.transfer_crossover_context(net, hw, FP)
+    ctx = max(x // 4, 1)                    # KV-favored context ...
+    assert miglib.plan_evacuation(net, hw, FP, ctx, 1e9) == "kv"
+    assert miglib.plan_evacuation(net, hw, FP, ctx, 0.0) == "token_id"
+
+
+# ---- eviction lifecycle -----------------------------------------------------
+
+def _cluster(spot_rate=60.0, grace=10.0):
+    return Cluster([Instance(0, hwlib.GPUS["A800"], FP),
+                    Instance(1, _spot(rate=spot_rate, grace=grace), FP)])
+
+
+def test_notice_stops_admissions_and_kill_lands_after_grace():
+    cluster = _cluster()
+    sim = Simulator(cluster, make_router("round_robin"), _reqs(6),
+                    preemptions=False)
+    g = cluster.instances[1]
+    sim._evict_notice(1, t=5.0)
+    assert g.state == "evicting" and not g.accepting
+    assert g.eviction_deadline == 15.0
+    assert sim.eviction_log == [(5.0, 1)]
+    # draining an evicting instance is meaningless; drain() refuses
+    assert not sim.drain(1, t=6.0)
+    sim._evict_kill(1, t=15.0)
+    assert g.state == "evicted" and not g.alive
+    assert g.retired_at == 15.0               # billed through the grace
+    assert sim.n_evictions == 1
+
+
+def test_stale_notice_for_retired_instance_is_ignored():
+    cluster = _cluster()
+    sim = Simulator(cluster, make_router("round_robin"), [],
+                    preemptions=False)
+    g = cluster.instances[1]
+    g.state, g.retired_at = "retired", 3.0
+    sim._evict_notice(1, t=5.0)
+    assert g.state == "retired" and sim.eviction_log == []
+
+
+def test_running_and_queued_work_evacuates_and_completes():
+    """Work on the evicting instance escapes during the grace window and
+    still finishes elsewhere; the preemption is attributed."""
+    cluster = _cluster(spot_rate=0.0, grace=2.0)  # notice injected by hand
+    reqs = _reqs(8)
+    sim = Simulator(cluster, make_router("round_robin"), reqs,
+                    preemptions=False)
+
+    class NoticeAt:
+        def __init__(self, at):
+            self.at, self.fired = at, False
+
+        def attach(self, s):
+            self.sim = s
+
+        def on_arrival(self, t):
+            pass
+
+        def on_request_done(self, sr, t):
+            pass
+
+        def on_eviction(self, gid, t):
+            pass
+
+        def on_tick(self, t):
+            if not self.fired and t >= self.at:
+                self.fired = True
+                self.sim._evict_notice(1, t)
+
+    sim.pool = NoticeAt(3.0)
+    sim.pool.attach(sim)
+    out, _ = sim.run()
+    g = cluster.instances[1]
+    assert sim.pool.fired
+    assert g.state == "evicted" and not g.queue and not g.running
+    assert all(sr.state == "done" for sr in out)
+    moved = [sr for sr in out if sr.preempted]
+    assert moved, "eviction must have touched in-flight work"
+    for sr in moved:
+        assert any(ev in ("evict", "evict_kill") for _, ev, _ in sr.journey)
+        assert sr.journey[-1][2] == 0         # finished on the survivor
+    # nothing was ever admitted to the spot instance after the notice
+    for sr in out:
+        enqs = [(t, gid) for (t, ev, gid) in sr.journey if ev == "enq"]
+        assert all(gid != 1 for t, gid in enqs if t > 3.01)
+
+
+def test_injected_evictions_are_deterministic_in_spot_seed():
+    logs = []
+    for _ in range(2):
+        cluster = _cluster(spot_rate=3600.0, grace=1.0)
+        sim = Simulator(cluster, make_router("round_robin"), _reqs(20),
+                        spot_seed=9)
+        sim.run()
+        logs.append((tuple(sim.eviction_log), sim.n_evictions))
+    assert logs[0] == logs[1]
+    assert logs[0][0], "rate this high must evict within the run"
+    assert logs[0][1] >= 1, "the kill must land inside the run too"
+
+
+def test_all_spot_pool_with_overlapping_graces_does_not_crash():
+    """Every instance in an eviction-grace window at once: arrivals must
+    fall back to the evicting instances (still serving for grace_s)
+    instead of crashing on an empty target list; work that dies with
+    the pool resolves as failed, not stuck."""
+    spot = _spot(rate=3600.0, grace=30.0)
+    cluster = Cluster([Instance(0, spot, FP), Instance(1, spot, FP)])
+    reqs = [Request(rid=i, family="code", prompt="p", input_len=300,
+                    output_len=2500, arrival=0.5 * i, slo=1e9)
+            for i in range(40)]
+    sim = Simulator(cluster, make_router("round_robin"), reqs,
+                    spot_seed=0)
+    out, _ = sim.run()
+    assert all(g.state == "evicted" for g in cluster.instances)
+    assert all(sr.state in ("done", "failed") for sr in out)
+    assert any(sr.state == "failed" for sr in out)   # pool died mid-run
+
+
+def test_arrivals_after_total_pool_death_are_lost_not_crashed():
+    """Short graces, arrivals outliving the whole pool: requests landing
+    after the last kill must resolve as lost (journey-tagged, distinct
+    from admission sheds) instead of crashing the router on an empty
+    target list."""
+    spot = _spot(rate=3600.0, grace=2.0)
+    cluster = Cluster([Instance(0, spot, FP), Instance(1, spot, FP)])
+    reqs = [Request(rid=i, family="code", prompt="p", input_len=300,
+                    output_len=2500, arrival=0.5 * i, slo=1e9)
+            for i in range(40)]
+    sim = Simulator(cluster, make_router("round_robin"), reqs,
+                    spot_seed=0)
+    out, dur = sim.run()
+    assert all(g.state == "evicted" for g in cluster.instances)
+    assert all(sr.state in ("done", "failed") for sr in out)
+    dead_at = max(g.retired_at for g in cluster.instances)
+    late = [sr for sr in out if sr.req.arrival > dead_at]
+    assert late, "the trace must outlive the pool for this test to bite"
+    assert all(sr.state == "failed" for sr in late)
+    for sr in late:
+        assert sr.journey[-1][1] == "lost"
+    from repro.core.metrics import summarize_elastic
+    s = summarize_elastic(out, dur, cluster)
+    assert s["n_shed"] == 0                   # nobody was admission-shed
+    assert s["n_lost"] == sum(1 for sr in out if sr.state == "failed")
+
+
+def test_kill_victims_wait_for_the_warming_replacement():
+    """Sole instance evicted while the controller's replacement is still
+    warming: victims park as orphans and resubmit at the join instead of
+    being counted as lost."""
+    class NoticeAt(ReactivePoolController):
+        def __init__(self, at, **kw):
+            super().__init__(**kw)
+            self.at, self.fired = at, False
+
+        def on_tick(self, t):
+            if not self.fired and t >= self.at:
+                self.fired = True
+                self.sim._evict_notice(0, t)
+            super().on_tick(t)
+
+    cluster = Cluster([Instance(0, _spot(rate=0.0, grace=2.0), FP)])
+    ctrl = NoticeAt(2.0, scale_types=("A800",),
+                    spot_types=("A800-spot",), max_spot=2,
+                    max_instances=3, warmup_override=6.0)
+    reqs = _reqs(6)
+    sim = Simulator(cluster, make_router("least_request"), reqs,
+                    pool=ctrl, preemptions=False)
+    out, _ = sim.run()
+    assert ctrl.fired
+    assert cluster.instances[0].state == "evicted"
+    assert any(a == "replace" for _, a, _ in ctrl.events)
+    assert all(sr.state == "done" for sr in out)
+    # the survivors really rode through the orphan path: killed with no
+    # live target, finished on the replacement
+    rescued = [sr for sr in out
+               if any(ev == "evict_kill" for _, ev, _ in sr.journey)]
+    assert rescued
+    assert all(sr.journey[-1][2] == 1 for sr in rescued)
+
+
+def test_orphans_are_lost_when_the_warming_rescuer_dies_pre_join():
+    """Victims parked for a warming replacement must resolve as lost —
+    not hang as pending forever — if that replacement fails before its
+    join; the run must still terminate promptly."""
+    class NoticeAt(ReactivePoolController):
+        def __init__(self, at, **kw):
+            super().__init__(**kw)
+            self.at, self.fired = at, False
+
+        def on_tick(self, t):
+            if not self.fired and t >= self.at:
+                self.fired = True
+                self.sim._evict_notice(0, t)
+            super().on_tick(t)
+
+    cluster = Cluster([Instance(0, _spot(rate=0.0, grace=2.0), FP)])
+    ctrl = NoticeAt(2.0, scale_types=("A800",),
+                    spot_types=("A800-spot",), max_spot=2,
+                    max_instances=3, warmup_override=20.0)
+    sim = Simulator(cluster, make_router("least_request"), _reqs(6),
+                    pool=ctrl, preemptions=False,
+                    fail_at={1: 6.0})        # replacement dies warming
+    out, dur = sim.run()
+    assert ctrl.fired
+    assert all(sr.state in ("done", "failed") for sr in out)
+    lost = [sr for sr in out if sr.state == "failed"]
+    assert lost and all(sr.journey[-1][1] == "lost" for sr in lost)
+    assert dur < 100.0                       # no tick-spin to max_time
+
+
+def test_evacuation_reaches_a_draining_survivor():
+    """Only draining capacity left when the notice lands: the grace
+    window must still be spent evacuating (the draining instance
+    finishes what it holds), not riding out to the kill."""
+    cluster = _cluster(spot_rate=0.0, grace=4.0)
+    reqs = _reqs(8)
+    sim = Simulator(cluster, make_router("round_robin"), reqs,
+                    preemptions=False)
+
+    class DrainThenNotice:
+        def __init__(self):
+            self.step = 0
+
+        def attach(self, s):
+            pass
+
+        def on_arrival(self, t):
+            pass
+
+        def on_request_done(self, sr, t):
+            pass
+
+        def on_eviction(self, gid, t):
+            pass
+
+        def on_tick(self, t):
+            if self.step == 0 and t >= 2.0:
+                self.step = 1
+                assert sim.drain(0, t)           # on-demand starts draining
+            elif self.step == 1 and t >= 3.0:
+                self.step = 2
+                sim._evict_notice(1, t)          # spot notice right after
+
+    sim.pool = DrainThenNotice()
+    out, _ = sim.run()
+    assert sim.pool.step == 2
+    evacuated = [sr for sr in out if sr.preempted
+                 and any(ev == "evict" for _, ev, _ in sr.journey)]
+    assert evacuated, "evacuation must fire with a draining survivor"
+    assert all(sr.state == "done" for sr in out)
+    assert all(sr.journey[-1][2] == 0 for sr in evacuated)
+
+
+def test_billing_stops_at_eviction_kill():
+    cluster = _cluster(spot_rate=0.0)
+    sim = Simulator(cluster, make_router("round_robin"), [],
+                    preemptions=False)
+    sim._evict_notice(1, t=10.0)
+    sim._evict_kill(1, t=20.0)
+    spot_hw = cluster.instances[1].hw
+    at_kill = cluster.cost_usd(20.0)
+    later = cluster.cost_usd(2000.0)
+    # only the surviving on-demand instance keeps accruing
+    on_demand_rate = cluster.instances[0].hw.cost_per_hour / 3600.0
+    assert later - at_kill == pytest.approx(1980.0 * on_demand_rate)
+    assert at_kill == pytest.approx(20.0 * (
+        cluster.instances[0].hw.cost_per_hour
+        + spot_hw.cost_per_hour) / 3600.0)
+
+
+# ---- proxy-visible signals --------------------------------------------------
+
+def test_view_exposes_spot_and_eviction_deadline():
+    cluster = _cluster()
+    sim = Simulator(cluster, make_router("round_robin"), [],
+                    preemptions=False)
+    cv = cluster.view(0.0)
+    assert not cv.view(0).is_spot and cv.view(1).is_spot
+    assert cv.view(1).eviction_deadline is None
+    assert [v.iid for v in cv.spot()] == [1]
+    sim._evict_notice(1, t=4.0)
+    cv = cluster.view(4.0)
+    v = cv.view(1)
+    assert v.state == "evicting" and not v.accepting
+    assert v.eviction_deadline == 4.0 + cluster.instances[1].hw.grace_s
+    assert [x.iid for x in cv.evicting()] == [1]
+    assert cv.spot() == []                    # no longer serving
+
+
+# ---- controller -------------------------------------------------------------
+
+def test_scale_up_prefers_spot_until_cap_then_on_demand():
+    cluster = Cluster([Instance(0, hwlib.GPUS["A800"], FP)])
+    ctrl = ReactivePoolController(scale_types=("A800",),
+                                  spot_types=("A800-spot",), max_spot=1)
+    ctrl.attach(Simulator(cluster, make_router("least_request"), [],
+                          preemptions=False))
+    view = cluster.view(0.0)
+    assert ctrl.pick_scale_up(view).is_spot
+    # once a spot instance is up (or warming), the cap redirects the
+    # next purchase to on-demand
+    cluster.instances.append(Instance(1, _spot(), FP))
+    view = cluster.view(0.0)
+    assert not ctrl.pick_scale_up(view).is_spot
+
+
+def test_controller_replaces_evicted_spot_inside_grace():
+    cluster = _cluster(spot_rate=0.0)
+    ctrl = ReactivePoolController(scale_types=("A800",),
+                                  spot_types=("A800-spot",), max_spot=2,
+                                  max_instances=4, warmup_override=5.0)
+    sim = Simulator(cluster, make_router("least_request"), [],
+                    pool=ctrl, preemptions=False)
+    n0 = len(cluster.instances)
+    sim._evict_notice(1, t=7.0)
+    # the notice hook provisioned a replacement immediately
+    assert len(cluster.instances) == n0 + 1
+    repl = cluster.instances[-1]
+    assert repl.state == "provisioning" and repl.started_at == 7.0
+    assert any(a == "replace" for _, a, _ in ctrl.events)
+    # an on-demand instance's failure must NOT trigger replacement
+    ctrl2 = ReactivePoolController(spot_types=("A800-spot",))
+    cluster2 = _cluster(spot_rate=0.0)
+    sim2 = Simulator(cluster2, make_router("least_request"), [],
+                     pool=ctrl2, preemptions=False)
+    ctrl2.on_eviction(0, 1.0)                 # iid 0 is on-demand
+    assert len(cluster2.instances) == 2 and not ctrl2.events
+
+
+# ---- GoodServe eviction-risk penalty ---------------------------------------
+
+def _warmed(cluster, q=0.0, p=1e-3, d=0.02):
+    for i in range(len(cluster.instances)):
+        e = cluster.estimator._get(i)
+        e.q, e.p, e.d, e.n_obs = q, p, d, 10
+
+
+def test_eviction_risk_positive_only_for_spot_when_aware():
+    cluster = _cluster()
+    router = make_router("goodserve", predictor=ConstPredictor(200.0))
+    Simulator(cluster, router, [], preemptions=False)
+    _warmed(cluster)
+    cv = cluster.view(0.0)
+    assert router._eviction_risk(cv.view(0), 5.0, 600.0) == 0.0
+    assert router._eviction_risk(cv.view(1), 5.0, 600.0) > 0.0
+    router.spot_aware = False
+    assert router._eviction_risk(cv.view(1), 5.0, 600.0) == 0.0
+
+
+def test_risk_penalty_keeps_tight_slack_off_spot():
+    """Identical twins, one spot: a request whose slack is eaten by the
+    eviction surcharge must land on-demand when the router is
+    spot-aware, while the oblivious router sees two equal instances and
+    takes the first (the spot one).  Long-slack work stays eligible for
+    spot either way."""
+    def route_one(spot_aware, slo):
+        cluster = Cluster([Instance(0, _spot(rate=3600.0, grace=5.0), FP),
+                           Instance(1, hwlib.GPUS["A800"], FP)])
+        router = make_router("goodserve",
+                             predictor=ConstPredictor(200.0),
+                             spot_aware=spot_aware)
+        sim = Simulator(cluster, router, [], preemptions=False)
+        _warmed(cluster)
+        req = Request(rid=0, family="code", prompt="p", input_len=500,
+                      output_len=200, arrival=0.0, slo=slo)
+        from repro.cluster.simulator import SimRequest
+        return router.route(SimRequest(req=req), 0.0)
+
+    # T = p*500 + d*200 = 0.5 + 4.0 = 4.5s on both; margin 0.7.
+    # slack 6.9 -> budget 4.83: feasible on both, but the spot risk
+    # surcharge (~0.6s at 1 eviction/s) tips the spot instance out.
+    assert route_one(spot_aware=True, slo=6.9) == 1
+    assert route_one(spot_aware=False, slo=6.9) == 0
+    # slack 60: surcharge is noise, spot stays feasible and wins the
+    # first-index tie again — long-tail work soaks up the discount
+    assert route_one(spot_aware=True, slo=60.0) == 0

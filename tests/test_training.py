@@ -16,6 +16,9 @@ from repro.training.optimizer import (AdamWConfig, adamw_update,
 from repro.training.train_step import (make_grad_accum_step,
                                        make_train_step)
 
+# JAX training loops: heavy compiles, opt-in via the full run
+pytestmark = pytest.mark.slow
+
 KEY = jax.random.PRNGKey(0)
 
 
