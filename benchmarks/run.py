@@ -22,7 +22,8 @@ def main() -> None:
                             fig6_end_to_end, fig7_ablation, fig8_predictor,
                             fig9_migration, fig10_sensitivity,
                             fig11_overhead, fig12_workflows,
-                            fig13_autoscale, fig14_spot, roofline)
+                            fig13_autoscale, fig14_spot, fig15_rectify,
+                            roofline)
 
     n_sim = 200 if args.fast else 400
     n_fig2 = 300 if args.fast else 600
@@ -49,6 +50,9 @@ def main() -> None:
         # fast mode halves the trace; the preemption rate is per-hour, so
         # the shorter span still sees eviction notices (asserted in-run)
         "fig14": lambda: fig14_spot.run(n=1100 if args.fast else 2200),
+        # fast mode shortens the trace but keeps the mid-run drift point
+        # (a fraction of the span, not an absolute time)
+        "fig15": lambda: fig15_rectify.run(n=1000 if args.fast else 2200),
         "roofline": lambda: roofline.run(),
     }
     only = [s for s in args.only.split(",") if s]

@@ -64,6 +64,8 @@ class SimRequest:
     preempted: bool = False     # touched by a spot eviction at least once
     iters_since_check: int = 0
     pred_out: float = 0.0       # router's current output-length belief
+    pred_admit: float = 0.0     # belief at FIRST admission (rectification
+                                # is scored on this vs the truth)
     journey: list = dataclasses.field(default_factory=list)  # (t, event, gid)
     # chunked-prefill progress
     prefill_progress: int = 0
@@ -544,6 +546,11 @@ class Simulator:
                 self.router.on_request_done(sr, t_next)
                 if self.pool is not None:
                     self.pool.on_request_done(sr, t_next)
+                if self.admission is not None:
+                    # close the predict-and-rectify loop: admission's
+                    # rectifier learns from every completion even under
+                    # routers that keep no length model of their own
+                    self.admission.on_request_done(sr, t_next)
                 self._release_children(sr, t_next)
             for sr in at_risk:
                 self.router.on_risk_check(sr, t_next)

@@ -207,16 +207,35 @@ def make_workload(n: int = 600, rps: float = 10.0, slo_scale=2.0,
                   model: str = "llama3.1-8b", seed: int = 0,
                   arrival: str = "mooncake",
                   reference_gpu: str = "A800",
-                  arrival_kw: Optional[Dict] = None) -> List[Request]:
+                  arrival_kw: Optional[Dict] = None,
+                  drift: Optional[Dict] = None) -> List[Request]:
     """``slo_scale`` may be a scalar (uniform tier, the paper's setup) or
     a ``(lo, hi)`` tuple: each request draws its relaxation factor
     uniformly, modeling mixed SLO tiers (interactive vs batch callers) —
-    the regime where slack-aware routing has real decisions to make."""
+    the regime where slack-aware routing has real decisions to make.
+
+    ``drift`` injects a mid-run output-length distribution shift (the
+    regime runtime rectification exists for), e.g. ``{"at": 0.5,
+    "out_mult": 2.5}``: every request arriving after ``at`` x the
+    arrival span has its ground-truth output length multiplied by
+    ``out_mult``.  Prompts and input lengths are untouched, so a
+    predictor trained (or configured) on the pre-drift distribution
+    keeps seeing familiar features while reality shifts under it; SLOs
+    are assigned from the *post-drift* lengths, so the work stays
+    feasible — it is the router's belief that breaks, not the
+    workload."""
     rng = np.random.default_rng(seed)
     fp = hwlib.footprint(model)
     ref = hwlib.GPUS[reference_gpu]
     reqs = [sample_request(rng, i) for i in range(n)]
     arr = _arrival_times(rng, n, rps, arrival, **(arrival_kw or {}))
+    if drift:
+        at = float(drift.get("at", 0.5))
+        mult = float(drift.get("out_mult", 2.5))
+        t_drift = at * float(arr[-1])
+        for r, a in zip(reqs, arr):
+            if a >= t_drift:
+                r.output_len = int(np.clip(r.output_len * mult, 8, 8192))
     # the paper sets SLO = median solo time on the mid-tier GPU x scale,
     # measured per request (temperature 0 => deterministic lengths)
     for r, a in zip(reqs, arr):

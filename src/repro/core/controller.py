@@ -325,13 +325,22 @@ class AdmissionController:
     """Early-shed admission: reject work that cannot make its deadline
     even on the fastest accepting instance (predicted critical path of
     this step + downstream steps > remaining slack x ``margin``).
-    Admits unconditionally while estimates are cold."""
+    Admits unconditionally while estimates are cold.
+
+    With a ``rectifier`` (core/rectify.py OnlineSurvival) the shed
+    decision consumes *rectified* remaining work: the point prediction
+    is blended with the empirical survival curve built from completions
+    the simulator feeds back (``on_request_done``), so admission keeps
+    shedding honestly when the output-length distribution drifts away
+    from whatever the predictor was trained on."""
     name = "early_shed"
 
-    def __init__(self, predictor, margin: float = 1.0, min_obs: int = 3):
+    def __init__(self, predictor, margin: float = 1.0, min_obs: int = 3,
+                 rectifier=None):
         self.predictor = predictor
         self.margin = margin
         self.min_obs = min_obs
+        self.rectifier = rectifier
         self.sim = None
         self.shed_log: List[Tuple[float, int]] = []   # (t, rid)
 
@@ -340,7 +349,21 @@ class AdmissionController:
 
     def _predict(self, sr) -> float:
         from repro.core.router import predict_output
-        return predict_output(self.predictor, sr)
+        pred = predict_output(self.predictor, sr)
+        if self.rectifier is not None:
+            pred = self.rectifier.rectify(pred, sr.req.input_len,
+                                          sr.tokens_out)
+        return pred
+
+    def on_request_done(self, sr, t: float):
+        """Completion feedback the simulator drives at request finish:
+        the rectifier learns the true streamed length.  Idempotent per
+        request id, so sharing one OnlineSurvival with the router is
+        safe — each completion counts once no matter which hook fires
+        first."""
+        if self.rectifier is not None:
+            self.rectifier.observe(sr.req.input_len, sr.tokens_out,
+                                   rid=sr.req.rid)
 
     def admit(self, sr, t: float) -> bool:
         cv = self.sim.cluster.view(t)

@@ -120,6 +120,23 @@ def spot_cost_usd(cluster, duration: float) -> float:
                for g in cluster.instances if g.hw.is_spot)
 
 
+def prediction_mae_tokens(finished) -> float:
+    """Mean |admission-time output-length belief - actual tokens| over
+    requests that produced tokens — the router-side estimation error
+    the rectification loop exists to shrink.  Scored at ADMISSION
+    (``pred_admit``), not at the last risk check: the mid-flight
+    "at least one more token" clamp trivially converges to the truth as
+    a request finishes, which would make a non-rectifying router look
+    well calibrated exactly when its routing decisions weren't.  NaN
+    when no request carries a belief (routers that never predict) —
+    "unmeasured" must not read as "perfect"."""
+    errs = [abs(r.pred_admit - r.tokens_out) for r in finished
+            if getattr(r, "pred_admit", 0.0) > 0.0 and r.tokens_out > 0]
+    if not errs:
+        return float("nan")
+    return sum(errs) / len(errs)
+
+
 def preemption_violations(finished) -> int:
     """SLO violations among requests a spot eviction touched (evacuated
     in the grace window or killed outright) — the price of the discount,
@@ -152,6 +169,7 @@ def summarize_elastic(finished, duration: float, cluster) -> dict:
         "n_preempted": sum(1 for r in finished
                            if getattr(r, "preempted", False)),
         "preempt_violations": preemption_violations(finished),
+        "pred_mae_tokens": prediction_mae_tokens(finished),
     })
     return s
 

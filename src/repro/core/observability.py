@@ -171,5 +171,14 @@ class ClusterView:
         return [v for v in self.instances
                 if v.is_spot and v.alive and v.state == "active"]
 
+    def at_risk(self) -> List[InstanceView]:
+        """Spot instances currently exposed to provider reclamation —
+        alive and serving or draining (a notice can still land on a
+        draining spot instance).  The exposure clock the eviction-rate
+        estimator integrates runs over exactly these."""
+        return [v for v in self.instances
+                if v.is_spot and v.alive
+                and v.state in ("active", "draining")]
+
     def total_pending(self) -> int:
         return sum(v.pending for v in self.accepting())

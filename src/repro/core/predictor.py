@@ -238,6 +238,10 @@ class HistoryPredictor:
         return self
 
     def _bucket(self, input_len) -> int:
+        if self.edges is None:
+            # runtime feedback may arrive before any fit(): degrade to a
+            # single shared bucket instead of crashing the serving loop
+            return 0
         return int(np.digitize(input_len, self.edges))
 
     def observe(self, input_len: int, output_len: int):
@@ -360,6 +364,13 @@ class SessionAwarePredictor:
         h.append(float(output_len))
         if len(h) > self.window:
             del h[0]
+
+    def observe(self, input_len: int, output_len: float):
+        """Per-completion feedback (the runtime rectification loop fires
+        this at request finish): forward to a base predictor that learns
+        online, e.g. HistoryPredictor."""
+        if hasattr(self.base, "observe"):
+            self.base.observe(input_len, output_len)
 
     def predict(self, prompts, input_lens, generated=None,
                 sessions=None) -> np.ndarray:

@@ -21,6 +21,7 @@ import numpy as np
 from repro.cluster import hardware as hwlib
 from repro.cluster.simulator import SimRequest, Simulator
 from repro.core import migration as miglib
+from repro.core import rectify as rectlib
 from repro.core.observability import ClusterView, InstanceView
 
 
@@ -221,7 +222,7 @@ class GoodServeRouter(Router):
 
     def __init__(self, predictor, seed: int = 0, enable_migration: bool = True,
                  migration_mode: str = "token_id", margin: float = 0.7,
-                 spot_aware: bool = True):
+                 spot_aware: bool = True, rectifier=None, evict_rates=None):
         super().__init__(seed)
         self.predictor = predictor
         self.enable_migration = enable_migration
@@ -230,6 +231,18 @@ class GoodServeRouter(Router):
         # FEASIBILITY test (spot_aware=False is the spot-oblivious
         # ablation: identical policy, risk term zeroed)
         self.spot_aware = spot_aware
+        # runtime rectification (core/rectify.py): an OnlineSurvival model
+        # turns stale point predictions into conditional remaining-length
+        # estimates as tokens stream; None reproduces the static
+        # admission-time point estimate.
+        self.rectifier = rectifier
+        # eviction-rate provider for the spot surcharge.  The catalog's
+        # rate field is the simulator's ground truth, not an observable —
+        # by default the router learns a Gamma-Poisson posterior from the
+        # notices it can see; pass rectlib.FixedEvictionRates for the
+        # oracle-rate ablation.
+        self.evict_rates = (evict_rates if evict_rates is not None
+                            else rectlib.EvictionRateEstimator())
         self._rr_cold = 0   # instance state: cold-start round-robin cursor
         # feasibility margin: T <= margin * slack.  The EMA estimates lag a
         # growing batch and exclude this request's own interference, so
@@ -251,7 +264,14 @@ class GoodServeRouter(Router):
         self.completion_window_s = 45.0
 
     def _predict(self, sr: SimRequest) -> float:
-        return predict_output(self.predictor, sr)
+        pred = predict_output(self.predictor, sr)
+        if self.rectifier is not None:
+            # conditional rectification: a request that has streamed past
+            # its point prediction gets E[L | L > generated] off the
+            # empirical survival curve, not a "one more token" clamp
+            pred = self.rectifier.rectify(pred, sr.req.input_len,
+                                          sr.tokens_out)
+        return pred
 
     @staticmethod
     def _downstream_steps(sr: SimRequest) -> int:
@@ -326,10 +346,13 @@ class GoodServeRouter(Router):
         context elsewhere).  Charged against the FEASIBILITY test only —
         like ``_queue_uncertainty`` — so tight-slack requests keep off
         spot while the best-effort fallback ranking stays unpenalized
-        and long-tail work soaks up the discounted capacity."""
+        and long-tail work soaks up the discounted capacity.  The rate
+        comes from ``self.evict_rates`` — by default the Gamma-Poisson
+        posterior learned from observed notices, never the oracle field
+        on the hardware spec (source-scan enforced)."""
         if not self.spot_aware or not v.is_spot:
             return 0.0
-        rate = v.hw.evictions_per_hour / 3600.0
+        rate = self.evict_rates.rate_per_hour(v.hw.name) / 3600.0
         if rate <= 0.0:
             return 0.0
         p_evict = 1.0 - float(np.exp(-rate * max(horizon, 0.0)))
@@ -356,6 +379,8 @@ class GoodServeRouter(Router):
 
     def _route(self, sr, t):
         sr.pred_out = self._predict(sr)
+        if sr.pred_admit == 0.0:      # keep the first-admission belief
+            sr.pred_admit = sr.pred_out
         views = self.targets(t)
         self._prune_recent(t)
         cold = [v.iid for v in views if v.ema.n_obs < self.min_obs]
@@ -403,6 +428,19 @@ class GoodServeRouter(Router):
             + 0.1 * chosen.ema.d * sr.pred_out
         self._recent_routes.append((t, chosen.iid, work))
         return chosen.iid
+
+    def on_tick(self, t: float):
+        # advance the eviction-rate posterior from the proxy-visible
+        # lifecycle snapshot (exposure accrues while spot instances are
+        # up; a notice is counted when an instance is first seen
+        # evicting).  FixedEvictionRates has no update hook, and a
+        # spot-oblivious router never reads the estimate — skip the
+        # per-tick snapshot in both cases.
+        if not self.spot_aware:
+            return
+        update = getattr(self.evict_rates, "update", None)
+        if update is not None:
+            update(self.view(t), t)
 
     def on_risk_check(self, sr: SimRequest, t: float):
         if (not self.enable_migration or sr.state != "running"
@@ -452,10 +490,20 @@ class GoodServeRouter(Router):
             dq.append(t)
             while dq and t - dq[0] > self.completion_window_s:
                 dq.popleft()     # bound growth while the queue stays empty
-        if (self.predictor is not None
-                and hasattr(self.predictor, "observe_step")
-                and sr.req.session >= 0):
-            self.predictor.observe_step(sr.req.session, sr.tokens_out)
+        # completion feedback: the proxy streamed the whole response, so
+        # the true output length is router-visible at finish — feed the
+        # survival curves (idempotent per rid: an AdmissionController
+        # sharing this rectifier won't double-count) and any predictor
+        # that learns online (HistoryPredictor-style observe).
+        if self.rectifier is not None:
+            self.rectifier.observe(sr.req.input_len, sr.tokens_out,
+                                   rid=sr.req.rid)
+        if self.predictor is not None:
+            if hasattr(self.predictor, "observe"):
+                self.predictor.observe(sr.req.input_len, sr.tokens_out)
+            if (hasattr(self.predictor, "observe_step")
+                    and sr.req.session >= 0):
+                self.predictor.observe_step(sr.req.session, sr.tokens_out)
 
 
 class OracleRouter(GoodServeRouter):
@@ -469,10 +517,12 @@ class OracleRouter(GoodServeRouter):
     name = "oracle"
 
     def __init__(self, seed: int = 0, enable_migration: bool = True,
-                 margin: float = 0.7):
+                 margin: float = 0.7, evict_rates=None):
         # predictor=None: the oracle reads ground-truth lengths instead
+        # (so it never rectifies — there is nothing to rectify)
         super().__init__(None, seed=seed, enable_migration=enable_migration,
-                         migration_mode="token_id", margin=margin)
+                         migration_mode="token_id", margin=margin,
+                         evict_rates=evict_rates)
 
     def _predict(self, sr):
         return float(sr.req.output_len)

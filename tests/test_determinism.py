@@ -19,6 +19,7 @@ from repro.core.controller import (AdmissionController,
                                    ForecastPoolController,
                                    ReactivePoolController)
 from repro.core.metrics import summarize_elastic, summarize_workflows
+from repro.core.rectify import EvictionRateEstimator, OnlineSurvival
 from repro.core.router import ALL_BASELINES, make_router
 
 FP = hwlib.footprint("llama3.1-8b")
@@ -79,6 +80,61 @@ def test_same_seed_replays_byte_identical(router_name):
     a = _run(router_name, "forecast")
     b = _run(router_name, "forecast")
     assert a == b, f"{router_name}: same-seed replay diverged"
+
+
+def _run_rectified(router_name: str, seed: int = 7) -> str:
+    """Same fingerprint with the RECTIFIED control plane engaged: a
+    shared OnlineSurvival rectifier, a Gamma-Poisson eviction-rate
+    estimator (no oracle rates anywhere), and admission control
+    consuming rectified remaining-work — the PR 4 configuration, for
+    every router."""
+    reqs, wfs = make_workflow_workload(n_workflows=6, rps=2.0,
+                                       slo_scale=3.0, seed=seed)
+    cluster = Cluster([Instance(0, hwlib.GPUS["A800"], FP),
+                       Instance(1, _spot_a800(), FP)])
+    pred = ConstPredictor(180.0)
+    rect = OnlineSurvival()
+    kw = {}
+    if router_name == "goodserve":
+        kw = dict(predictor=pred, rectifier=rect,
+                  evict_rates=EvictionRateEstimator(
+                      prior_rate_per_hour=40.0))
+    elif router_name == "oracle":
+        kw = dict(evict_rates=EvictionRateEstimator(
+            prior_rate_per_hour=40.0))
+    router = make_router(router_name, **kw)
+    ctrl = _controller("forecast")
+    adm = AdmissionController(pred, margin=3.0, rectifier=rect)
+    sim = Simulator(cluster, router, reqs, workflows=wfs, pool=ctrl,
+                    admission=adm, spot_seed=3)
+    out, dur = sim.run()
+    lines = []
+    for sr in out:
+        lines.append(repr((sr.req.rid, sr.state, sr.instance,
+                           sr.tokens_out, sr.n_migrations, sr.preempted,
+                           sr.finished_at, tuple(sr.journey))))
+    lines.append(repr(sim.migration_log))
+    lines.append(repr(sim.eviction_log))
+    lines.append(repr(adm.shed_log))
+    lines.append(repr(sorted(summarize_elastic(out, dur, cluster).items())))
+    # the learned state itself must replay: survival-curve feed count and
+    # the eviction posterior's evidence
+    lines.append(repr(rect.n_obs))
+    est = getattr(router, "evict_rates", None)
+    if est is not None:
+        lines.append(repr(sorted(est.notices.items())))
+        lines.append(repr(sorted((k, round(v, 12))
+                                 for k, v in est.exposure_hours.items())))
+    lines.append(repr(dur))
+    return "\n".join(lines)
+
+
+@pytest.mark.parametrize("router_name", ROUTERS)
+def test_rectified_control_plane_replays_byte_identical(router_name):
+    a = _run_rectified(router_name)
+    b = _run_rectified(router_name)
+    assert a == b, (f"{router_name}: same-seed replay diverged with the "
+                    f"rectified control plane")
 
 
 @pytest.mark.parametrize("controller", CONTROLLERS)

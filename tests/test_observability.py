@@ -22,18 +22,22 @@ _SRC = os.path.join(os.path.dirname(__file__), "..", "src", "repro")
 # ---- the black-box contract, enforced by construction ----------------------
 
 @pytest.mark.parametrize("module", ["core/router.py", "core/controller.py",
-                                    "core/migration.py"])
+                                    "core/migration.py", "core/rectify.py"])
 def test_no_instance_internals_in_proxy_code(module):
-    """Routers, pool/admission controllers, and the migration/evacuation
-    cost models observe the cluster ONLY through ClusterView — never
-    Instance.queue / Instance.running (the eviction-grace evacuation
-    planner in migration.py is driven by the simulator, but its inputs
-    are all proxy-visible: context lengths, grace remaining, catalog
-    hardware)."""
+    """Routers, pool/admission controllers, the migration/evacuation
+    cost models, and the rectify estimators observe the cluster ONLY
+    through ClusterView — never Instance.queue / Instance.running (the
+    eviction-grace evacuation planner in migration.py is driven by the
+    simulator, but its inputs are all proxy-visible: context lengths,
+    grace remaining, catalog hardware).  The oracle eviction-rate field
+    on the hardware spec is equally off-limits: it is the simulator's
+    injection parameter, not something an operator can read — proxy
+    code must go through a rectify rate provider (the Gamma-Poisson
+    estimator, or a FixedEvictionRates table a benchmark configures)."""
     src = open(os.path.join(_SRC, module)).read()
     for pattern in (r"\.queue\b", r"\.running\b", r"\.session_cache\b",
                     r"\.prefix_cache\b", r"\.eviction_deadline\s*=",
-                    r"\._spot_rng\b"):
+                    r"\._spot_rng\b", r"\.evictions_per_hour\b"):
         hits = [ln for ln in src.splitlines() if re.search(pattern, ln)]
         assert not hits, f"{module} touches Instance internals: {hits}"
 

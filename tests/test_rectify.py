@@ -1,0 +1,267 @@
+"""Runtime rectification subsystem (core/rectify.py): property tests via
+the hypothesis shim for the OnlineSurvival conditional-length model and
+the Gamma-Poisson eviction-rate posterior, plus regression tests for the
+completion-feedback wiring (simulator -> router/admission -> predictor/
+rectifier) and the drift workload knob."""
+import numpy as np
+import pytest
+from _hyp import given, settings, st
+from conftest import ConstPredictor
+
+from repro.cluster import hardware as hwlib
+from repro.cluster.simulator import Cluster, Instance, Simulator
+from repro.cluster.workload import Request, make_workload
+from repro.core.controller import AdmissionController
+from repro.core.predictor import HistoryPredictor, SessionAwarePredictor
+from repro.core.rectify import (EvictionRateEstimator, FixedEvictionRates,
+                                OnlineSurvival)
+from repro.core.router import make_router
+
+FP = hwlib.footprint("llama3.1-8b")
+
+
+# ---- OnlineSurvival properties ---------------------------------------------
+
+OUTS = st.lists(st.floats(min_value=1.0, max_value=4096.0),
+                min_size=0, max_size=60)
+
+
+@settings(max_examples=40, deadline=None)
+@given(outs=OUTS,
+       input_len=st.integers(min_value=16, max_value=8192),
+       generated=st.floats(min_value=0.0, max_value=8192.0),
+       pred=st.floats(min_value=1.0, max_value=4096.0))
+def test_remaining_nonnegative_total_never_below_generated(
+        outs, input_len, generated, pred):
+    """Remaining-length estimates are finite and non-negative, and the
+    rectified total never predicts fewer tokens than already streamed —
+    with or without enough samples to leave the point-estimate path."""
+    surv = OnlineSurvival()
+    for o in outs:
+        surv.observe(input_len, o)
+    rem = surv.expected_remaining(input_len, generated)
+    assert rem is None or (np.isfinite(rem) and rem >= 0.0)
+    total = surv.expected_total(input_len, generated)
+    assert total is None or (np.isfinite(total) and total >= generated)
+    rect = surv.rectify(pred, input_len, generated)
+    assert np.isfinite(rect) and rect >= generated
+
+
+@settings(max_examples=30, deadline=None)
+@given(outs=st.lists(st.floats(min_value=2.0, max_value=2000.0),
+                     min_size=8, max_size=80),
+       input_len=st.integers(min_value=16, max_value=8192))
+def test_conditional_mean_matches_empirical_and_is_monotone(
+        outs, input_len):
+    """At generated=0 the estimate IS the window's empirical mean; as
+    generated rises toward the observed max, E[L | L > g] is monotone
+    non-decreasing and converges to the surviving tail's empirical mean
+    (just below the max, that is the max itself)."""
+    surv = OnlineSurvival(window=4096)
+    for o in outs:
+        surv.observe(input_len, o)
+    s = np.asarray(outs, float)
+    assert surv.expected_total(input_len, 0.0) == pytest.approx(s.mean())
+    mx = float(s.max())
+    near_max = surv.expected_total(input_len, mx - 1e-6)
+    assert near_max == pytest.approx(s[s > mx - 1e-6].mean())
+    vals = [surv.expected_total(input_len, g)
+            for g in np.linspace(0.0, mx + 50.0, 16)]
+    for lo, hi in zip(vals, vals[1:]):
+        assert hi >= lo - 1e-9
+
+
+def test_rectify_leans_on_the_curve_once_prediction_is_falsified():
+    """'Predicted 200, already generated 250': the rectified total must
+    track the empirical tail (~600 here), not the stale clamp of 251."""
+    surv = OnlineSurvival()
+    for _ in range(64):
+        surv.observe(500, 600.0)
+    rect = surv.rectify(200.0, 500, 250.0)
+    assert rect > 500.0
+    assert rect == pytest.approx(600.0, rel=0.1)
+
+
+def test_observe_is_idempotent_per_rid():
+    surv = OnlineSurvival()
+    for _ in range(5):
+        surv.observe(100, 50.0, rid=7)
+    assert surv.n_obs == 1
+    surv.observe(100, 50.0)          # no rid: always counts
+    surv.observe(100, 50.0, rid=8)
+    assert surv.n_obs == 3
+
+
+# ---- Gamma-Poisson eviction-rate posterior ---------------------------------
+
+@settings(max_examples=40, deadline=None)
+@given(prior=st.floats(min_value=0.5, max_value=100.0),
+       strength=st.floats(min_value=0.01, max_value=10.0),
+       notices=st.integers(min_value=0, max_value=200),
+       exposure=st.floats(min_value=0.0, max_value=500.0))
+def test_posterior_mean_between_prior_and_mle(prior, strength, notices,
+                                              exposure):
+    est = EvictionRateEstimator(prior_rate_per_hour=prior,
+                                prior_strength_hours=strength)
+    for _ in range(notices):
+        est.observe_notice("A800-spot")
+    est.observe_exposure("A800-spot", exposure)
+    post = est.rate_per_hour("A800-spot")
+    assert np.isfinite(post) and post >= 0.0
+    if exposure > 0.0:
+        mle = notices / exposure
+        assert min(prior, mle) - 1e-9 <= post <= max(prior, mle) + 1e-9
+    elif notices == 0:
+        # zero evidence: the prior, exactly
+        assert post == pytest.approx(prior)
+    else:
+        # notices with no measured exposure: MLE is +inf, so the
+        # posterior may only move UP from the prior — and stays finite
+        assert post >= prior - 1e-9
+
+
+@settings(max_examples=30, deadline=None)
+@given(prior=st.floats(min_value=0.5, max_value=100.0),
+       strength=st.floats(min_value=0.05, max_value=5.0),
+       k_unit=st.integers(min_value=0, max_value=20),
+       t_unit=st.floats(min_value=0.2, max_value=10.0))
+def test_posterior_shrinks_toward_observed_rate_monotonically(
+        prior, strength, k_unit, t_unit):
+    """Hold the observed rate fixed (k_unit notices per t_unit hours)
+    and scale the exposure: the gap |posterior - observed| must shrink
+    monotonically as evidence accumulates."""
+    observed = k_unit / t_unit
+    gaps = []
+    for m in range(1, 7):
+        est = EvictionRateEstimator(prior_rate_per_hour=prior,
+                                    prior_strength_hours=strength)
+        for _ in range(k_unit * m):
+            est.observe_notice("s")
+        est.observe_exposure("s", t_unit * m)
+        post = est.rate_per_hour("s")
+        assert np.isfinite(post) and post >= 0.0
+        gaps.append(abs(post - observed))
+    for lo, hi in zip(gaps, gaps[1:]):
+        assert hi <= lo + 1e-9
+
+
+def test_zero_notice_and_zero_exposure_streams_stay_finite():
+    est = EvictionRateEstimator(prior_rate_per_hour=12.0)
+    assert est.rate_per_hour("never-seen") == pytest.approx(12.0)
+    est.observe_exposure("s", 0.0)             # degenerate: ignored
+    assert est.rate_per_hour("s") == pytest.approx(12.0)
+    prev = est.rate_per_hour("s")
+    for _ in range(50):                        # long zero-notice stream
+        est.observe_exposure("s", 1.0)
+        cur = est.rate_per_hour("s")
+        assert np.isfinite(cur) and 0.0 <= cur <= prev + 1e-12
+        prev = cur
+    assert est.rate_per_hour("s") < 1.0        # evidence beat the prior
+
+
+def test_fixed_rates_is_a_plain_table_without_update():
+    oracle = FixedEvictionRates({"A800-spot": 30.0})
+    assert oracle.rate_per_hour("A800-spot") == 30.0
+    assert oracle.rate_per_hour("unknown") == 0.0
+    assert not hasattr(oracle, "update")       # never fed snapshots
+
+
+def test_estimator_learns_from_cluster_view_snapshots():
+    """End-to-end: a GoodServe run over a churny spot pool must leave
+    the router's default estimator with real exposure, exactly the
+    notices the simulator logged, and a posterior pulled up from the
+    prior toward the (much higher) true rate."""
+    spot = hwlib.spot_variant(hwlib.GPUS["A800"],
+                              evictions_per_hour=3600.0, grace_s=1.0)
+    cluster = Cluster([Instance(0, hwlib.GPUS["A800"], FP),
+                       Instance(1, spot, FP)])
+    est = EvictionRateEstimator(prior_rate_per_hour=5.0)
+    router = make_router("goodserve", predictor=ConstPredictor(150.0),
+                         evict_rates=est)
+    reqs = [Request(rid=i, family="code", prompt="p", input_len=300,
+                    output_len=400, arrival=0.05 * i, slo=1e9)
+            for i in range(12)]
+    sim = Simulator(cluster, router, reqs, spot_seed=9)
+    out, _ = sim.run()
+    assert all(sr.state == "done" for sr in out)
+    assert sim.eviction_log, "rate this high must evict within the run"
+    assert est.exposure_hours.get(spot.name, 0.0) > 0.0
+    assert sum(est.notices.values()) == len(sim.eviction_log)
+    assert est.rate_per_hour(spot.name) > 5.0
+
+
+# ---- completion-feedback wiring (the simulator closes the loop) ------------
+
+def _two_a800():
+    return Cluster([Instance(0, hwlib.GPUS["A800"], FP),
+                    Instance(1, hwlib.GPUS["A800"], FP)])
+
+
+def test_completion_feedback_moves_history_predictor_buckets():
+    """Satellite regression: HistoryPredictor.observe (through the
+    SessionAwarePredictor wrapper) must fire at request finish during a
+    sim run — every completion lands in the buckets exactly once, with
+    the true streamed token counts."""
+    base = HistoryPredictor(n_buckets=4)
+    base.edges = np.array([200.0, 400.0, 800.0])
+    pred = SessionAwarePredictor(base)
+    assert all(not h for h in base.hist)
+    router = make_router("goodserve", predictor=pred)
+    reqs = make_workload(n=20, rps=20.0, slo_scale=3.0, seed=3)
+    sim = Simulator(_two_a800(), router, reqs)
+    out, _ = sim.run()
+    assert all(sr.state == "done" for sr in out)
+    observed = sorted(x for h in base.hist for x in h)
+    assert observed == sorted(float(sr.tokens_out) for sr in out)
+
+
+def test_admission_rectifier_is_fed_under_any_router():
+    """The simulator (not the router) drives admission's completion
+    hook, so the rectified shed decision learns even when the router
+    keeps no length model of its own."""
+    rect = OnlineSurvival()
+    adm = AdmissionController(ConstPredictor(150.0), margin=1e9,
+                              rectifier=rect)
+    sim = Simulator(_two_a800(), make_router("round_robin"),
+                    make_workload(n=15, rps=20.0, slo_scale=3.0, seed=5),
+                    admission=adm)
+    out, _ = sim.run()
+    assert all(sr.state == "done" for sr in out)
+    assert rect.n_obs == len(out)
+
+
+def test_shared_rectifier_counts_each_completion_once():
+    """GoodServe router + AdmissionController sharing one OnlineSurvival:
+    the per-rid dedupe keeps the double hook from double-counting."""
+    rect = OnlineSurvival()
+    pred = ConstPredictor(150.0)
+    router = make_router("goodserve", predictor=pred, rectifier=rect)
+    adm = AdmissionController(pred, margin=1e9, rectifier=rect)
+    sim = Simulator(_two_a800(), router,
+                    make_workload(n=15, rps=20.0, slo_scale=3.0, seed=5),
+                    admission=adm)
+    out, _ = sim.run()
+    assert all(sr.state == "done" for sr in out)
+    assert rect.n_obs == len(out)
+
+
+# ---- drift workload knob ----------------------------------------------------
+
+def test_workload_drift_shifts_only_late_output_lengths():
+    base = make_workload(n=200, rps=20.0, slo_scale=2.0, seed=5)
+    drifted = make_workload(n=200, rps=20.0, slo_scale=2.0, seed=5,
+                            drift={"at": 0.5, "out_mult": 3.0})
+    span = max(r.arrival for r in drifted)
+    assert span == max(r.arrival for r in base)      # same rng stream
+    t_drift = 0.5 * span
+    n_late = 0
+    for b, d in zip(base, drifted):
+        assert d.input_len == b.input_len and d.prompt == b.prompt
+        if d.arrival >= t_drift:
+            n_late += 1
+            assert d.output_len == int(np.clip(b.output_len * 3.0,
+                                               8, 8192))
+            assert d.slo >= b.slo                    # SLO follows reality
+        else:
+            assert d.output_len == b.output_len and d.slo == b.slo
+    assert n_late > 0

@@ -414,13 +414,19 @@ def test_risk_penalty_keeps_tight_slack_off_spot():
     eviction surcharge must land on-demand when the router is
     spot-aware, while the oblivious router sees two equal instances and
     takes the first (the spot one).  Long-slack work stays eligible for
-    spot either way."""
+    spot either way.  The rate is injected via FixedEvictionRates (the
+    oracle-rate provider) so the test pins the penalty MATH; learning
+    the rate from notices is covered by tests/test_rectify.py."""
+    from repro.core.rectify import FixedEvictionRates
+
     def route_one(spot_aware, slo):
         cluster = Cluster([Instance(0, _spot(rate=3600.0, grace=5.0), FP),
                            Instance(1, hwlib.GPUS["A800"], FP)])
         router = make_router("goodserve",
                              predictor=ConstPredictor(200.0),
-                             spot_aware=spot_aware)
+                             spot_aware=spot_aware,
+                             evict_rates=FixedEvictionRates(
+                                 {"A800-spot": 3600.0}))
         sim = Simulator(cluster, router, [], preemptions=False)
         _warmed(cluster)
         req = Request(rid=0, family="code", prompt="p", input_len=500,
