@@ -1,11 +1,32 @@
 """Shared benchmark plumbing: timed rows in the harness CSV contract
-(``name,us_per_call,derived``) plus one shared trained predictor."""
+(``name,us_per_call,derived``), one shared trained predictor, and the
+engine-config'd catalog helpers the scenario figures build pools from."""
 from __future__ import annotations
 
+import dataclasses
 import functools
 import time
 
 ROWS = []
+
+
+def gpu(name: str, max_seqs: int = 32):
+    """Catalog entry with the scenario benchmarks' engine config
+    (max_num_seqs=32: a TPOT-protecting admission cap, so queue depth
+    is a live backpressure signal the controllers can see)."""
+    from repro.cluster import hardware as hwlib
+    return dataclasses.replace(hwlib.catalog(name), max_seqs=max_seqs)
+
+
+def spot_gpu(name: str, evictions_per_hour: float, grace_s: float,
+             max_seqs: int = 32):
+    """Preemptible twin of ``name`` with the same engine config."""
+    from repro.cluster import hardware as hwlib
+    return dataclasses.replace(
+        hwlib.spot_variant(hwlib.GPUS[name],
+                           evictions_per_hour=evictions_per_hour,
+                           grace_s=grace_s),
+        max_seqs=max_seqs)
 
 
 def emit(name: str, us_per_call: float, derived: str):

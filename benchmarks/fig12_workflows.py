@@ -7,14 +7,15 @@ only when their parents complete, step k+1's prompt embeds step k's
 output (growing shared session prefix), and GoodServe routes with
 remaining-workflow-work prediction + session KV affinity, with the
 session-aware predictor blending per-session step history into the MoE
-prediction.  All baselines + the oracle run the identical workload.
+prediction.  All baselines + the oracle run the identical workload,
+each as one ``ExperimentSpec`` through ``run_experiment``.
 """
 from __future__ import annotations
 
-from benchmarks.common import emit, shared_predictor, timed
-from repro.cluster.simulator import Simulator, build_paper_cluster
+from benchmarks.common import emit, shared_predictor
+from repro.bench import ExperimentSpec, run_experiment
+from repro.cluster.simulator import build_paper_cluster
 from repro.cluster.workload import make_workflow_workload
-from repro.core.metrics import summarize_workflows
 from repro.core.predictor import SessionAwarePredictor
 from repro.core.router import make_router
 
@@ -28,17 +29,20 @@ def run(n: int = 60, rps: float = 3.0, slo_scale: float = 2.0,
     table = {}
     best_baseline, gs = 0.0, 0.0
     for name in ROUTERS:
-        reqs, wfs = make_workflow_workload(
-            n_workflows=n, rps=rps, slo_scale=slo_scale, model=model,
-            seed=seed)
-        cluster = build_paper_cluster(model=model)
-        pred = (SessionAwarePredictor(base) if name == "goodserve" else None)
-        router = make_router(name, predictor=pred)
-        sim = Simulator(cluster, router, reqs, tau=50, workflows=wfs)
-        (out, dur), us = timed(sim.run)
-        s = summarize_workflows(out, dur)
-        table[name] = s
-        emit(f"fig12_wf_{name}", us,
+        spec = ExperimentSpec(
+            name=f"fig12_wf_{name}",
+            pool=lambda: build_paper_cluster(model=model),
+            workload=lambda s: make_workflow_workload(
+                n_workflows=n, rps=rps, slo_scale=slo_scale, model=model,
+                seed=s),
+            plane=lambda cluster: make_router(
+                name, predictor=(SessionAwarePredictor(base)
+                                 if name == "goodserve" else None)),
+            seeds=(seed,),
+            sim_kw=dict(tau=50))
+        res = run_experiment(spec)[0]
+        s = table[name] = res.summary
+        emit(spec.name, res.us,
              f"wf_goodput={s['workflow_goodput_wps']:.3f} "
              f"wf_viol={s['workflow_violation_ratio']:.3f} "
              f"steps={s['n_steps']} migs={s['migrations']}")

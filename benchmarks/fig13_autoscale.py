@@ -5,40 +5,38 @@ The diurnal trace swings between ~0.15x and ~1.85x the mean arrival
 rate.  A statically-sized pool must choose its regret: sized for the
 peak it overpays all trough long, sized for the mean it misses SLOs all
 peak long.  The elastic modes start from a 2-instance base pool
-(H800 + A800) and let a PoolController buy/return capacity from the
+(H800 + A800) and let a pool controller buy/return capacity from the
 catalog; GoodServe additionally runs early-shed admission control.
 Metrics are cost-aware: goodput over the (shared) arrival span, pool
 dollars, and goodput-per-dollar — the quantity autoscaling optimizes.
 
 Engines run max_num_seqs=32 (TPOT-protecting admission cap), so queue
 depth is a live backpressure signal the controllers can see.
+
+Each configuration is one declarative ``ExperimentSpec`` run through
+``run_experiment`` (src/repro/bench/harness.py); this module keeps only
+the figure's pool/plane factories and its assertions.
 """
 from __future__ import annotations
 
-import dataclasses
-
 import numpy as np
 
-from benchmarks.common import emit, timed
+from benchmarks.common import emit, gpu as _gpu
+from repro.bench import ExperimentSpec, run_experiment
 from repro.cluster import hardware as hwlib
-from repro.cluster.simulator import Cluster, Instance, Simulator
+from repro.cluster.simulator import Cluster, Instance
 from repro.cluster.workload import FAMILIES, _FAMILY_WORDS, make_workload
+from repro.core.control_plane import ControlPlane
 from repro.core.controller import (AdmissionController,
                                    ForecastPoolController,
                                    ReactivePoolController)
-from repro.core.metrics import summarize_elastic
 from repro.core.router import make_router
 
 ROUTERS = ["random", "least_request", "lowest_tpm", "preble",
            "goodserve", "oracle"]
 MODES = ["static", "reactive", "forecast"]
 
-MAX_SEQS = 32
 WARMUP_S = 20.0      # elastic instances: container already staged
-
-
-def _gpu(name: str) -> hwlib.HardwareSpec:
-    return dataclasses.replace(hwlib.GPUS[name], max_seqs=MAX_SEQS)
 
 
 class FamilyMeanPredictor:
@@ -72,7 +70,7 @@ class FamilyMeanPredictor:
         return np.asarray(out, np.float32)
 
 
-def _cluster(mode: str):
+def _cluster(mode: str) -> Cluster:
     fp = hwlib.footprint("llama3.1-8b")
     if mode == "static":
         # the paper's fixed heterogeneous testbed
@@ -95,36 +93,37 @@ def _controller(mode: str):
             else ForecastPoolController(**kw))
 
 
+def _plane(mode: str, name: str):
+    def build(cluster):
+        pred = FamilyMeanPredictor()
+        router = make_router(
+            name, predictor=pred if name == "goodserve" else None)
+        # shed only the unambiguously doomed: a coarse predictor with a
+        # tight shed margin kills feasible work
+        adm = (AdmissionController(pred, margin=3.0)
+               if name == "goodserve" else None)
+        return ControlPlane(router=router, pool=_controller(mode),
+                            admission=adm)
+    return build
+
+
 def run(n: int = 2200, rps: float = 11.0, period: float = 200.0,
         amplitude: float = 0.85, slo_scale: float = 2.5, seed: int = 4):
     results = {}
     for mode in MODES:
         for name in ROUTERS:
-            reqs = make_workload(
-                n=n, rps=rps, slo_scale=slo_scale, seed=seed,
-                arrival="diurnal",
-                arrival_kw=dict(period=period, amplitude=amplitude))
-            span = max(r.arrival for r in reqs)
-            cluster = _cluster(mode)
-            pred = FamilyMeanPredictor()
-            router = make_router(
-                name, predictor=pred if name == "goodserve" else None)
-            # shed only the unambiguously doomed: a coarse predictor
-            # with a tight shed margin kills feasible work
-            adm = (AdmissionController(pred, margin=3.0)
-                   if name == "goodserve" else None)
-            sim = Simulator(cluster, router, reqs,
-                            pool=_controller(mode), admission=adm)
-            (out, dur), us = timed(sim.run)
-            s = summarize_elastic(out, dur, cluster)
-            # goodput over the shared arrival span: run-duration tails
-            # (one straggler request) must not distort the comparison
-            good = sum(1 for r in out if r.finished_at is not None
-                       and (r.finished_at - r.req.arrival) <= r.req.slo)
-            s["goodput_rps"] = good / span
-            s["goodput_per_usd"] = good / max(s["cost_usd"], 1e-9)
-            results[(mode, name)] = s
-            emit(f"fig13_{mode}_{name}", us,
+            spec = ExperimentSpec(
+                name=f"fig13_{mode}_{name}",
+                pool=lambda mode=mode: _cluster(mode),
+                workload=lambda s: make_workload(
+                    n=n, rps=rps, slo_scale=slo_scale, seed=s,
+                    arrival="diurnal",
+                    arrival_kw=dict(period=period, amplitude=amplitude)),
+                plane=_plane(mode, name),
+                seeds=(seed,))
+            res = run_experiment(spec)[0]
+            s = results[(mode, name)] = res.summary
+            emit(spec.name, res.us,
                  f"goodput={s['goodput_rps']:.3f}rps "
                  f"viol={s['violation_ratio']:.3f} "
                  f"cost=${s['cost_usd']:.2f} "

@@ -25,24 +25,26 @@ quantity the spot discount is supposed to buy.  The run asserts the
 tentpole property: spot-aware GoodServe beats the all-on-demand pool on
 goodput-per-$ while keeping violations at or below the spot-oblivious
 baseline.
+
+Each configuration is one ``ExperimentSpec`` through ``run_experiment``;
+the figure keeps its factories, the spot-share probe, and the
+assertions.
 """
 from __future__ import annotations
 
-import dataclasses
-
-from benchmarks.common import emit, timed
+from benchmarks.common import emit, gpu as _gpu, spot_gpu
 from benchmarks.fig13_autoscale import FamilyMeanPredictor
+from repro.bench import ExperimentSpec, run_experiment
 from repro.cluster import hardware as hwlib
-from repro.cluster.simulator import Cluster, Instance, Simulator
+from repro.cluster.simulator import Cluster, Instance
 from repro.cluster.workload import make_workload
+from repro.core.control_plane import ControlPlane
 from repro.core.controller import ReactivePoolController
-from repro.core.metrics import summarize_elastic
 from repro.core.router import make_router
 
 ROUTERS = ["random", "least_request", "preble", "goodserve"]
 MODES = ["ondemand", "spot_oblivious", "spot_aware"]
 
-MAX_SEQS = 32
 WARMUP_S = 12.0               # replacement spot VMs: image already staged
 EVICTIONS_PER_HOUR = 30.0     # aggressive churn so a run sees real kills
 GRACE_S = 15.0
@@ -50,16 +52,8 @@ SPOT_SEED = 16                # base-pool preemption trace shared by every
                               # config (per-(seed, iid) notice streams)
 
 
-def _gpu(name: str) -> hwlib.HardwareSpec:
-    return dataclasses.replace(hwlib.catalog(name), max_seqs=MAX_SEQS)
-
-
-def _spot(name: str) -> hwlib.HardwareSpec:
-    return dataclasses.replace(
-        hwlib.spot_variant(hwlib.GPUS[name],
-                           evictions_per_hour=EVICTIONS_PER_HOUR,
-                           grace_s=GRACE_S),
-        max_seqs=MAX_SEQS)
+def _spot(name: str):
+    return spot_gpu(name, EVICTIONS_PER_HOUR, GRACE_S)
 
 
 def _cluster(mode: str) -> Cluster:
@@ -82,50 +76,53 @@ def _controller(mode: str):
         warmup_override=WARMUP_S)
 
 
+def _plane(mode: str, name: str):
+    def build(cluster):
+        pred = FamilyMeanPredictor()
+        kw = {}
+        if name == "goodserve":
+            kw["spot_aware"] = mode == "spot_aware"
+        router = make_router(
+            name, predictor=pred if name == "goodserve" else None, **kw)
+        return ControlPlane(router=router, pool=_controller(mode))
+    return build
+
+
+def _spot_share(res, s):
+    """Where did each SLO tier land?  The risk surcharge should keep
+    tight-slack work off preemptible capacity while relaxed long-tail
+    work soaks it up."""
+    spot_iids = {g.iid for g in res.cluster.instances if g.hw.is_spot}
+    for tier in ("tight", "relaxed"):
+        sel = [r for r in res.requests if r.req.tier == tier]
+        on = sum(1 for r in sel
+                 if any(gid in spot_iids for _, ev, gid in r.journey
+                        if ev == "enq"))
+        s[f"spot_share_{tier}"] = on / max(len(sel), 1)
+
+
 def run(n: int = 2200, rps: float = 12.0, slo_scale=(1.5, 4.0),
         seed: int = 4):
     results = {}
     for mode in MODES:
         for name in ROUTERS:
-            reqs = make_workload(n=n, rps=rps, slo_scale=slo_scale,
-                                 seed=seed, arrival="mooncake")
-            span = max(r.arrival for r in reqs)
-            cluster = _cluster(mode)
-            pred = FamilyMeanPredictor()
-            kw = {}
-            if name == "goodserve":
-                kw["spot_aware"] = mode == "spot_aware"
-            router = make_router(
-                name, predictor=pred if name == "goodserve" else None,
-                **kw)
-            sim = Simulator(cluster, router, reqs, pool=_controller(mode),
-                            spot_seed=SPOT_SEED)
-            (out, dur), us = timed(sim.run)
-            s = summarize_elastic(out, dur, cluster)
-            # goodput over the shared arrival span, not the run tail
-            good = sum(1 for r in out if r.finished_at is not None
-                       and (r.finished_at - r.req.arrival) <= r.req.slo)
-            s["goodput_rps"] = good / span
-            s["goodput_per_usd"] = good / max(s["cost_usd"], 1e-9)
-            s["n_eviction_notices"] = len(sim.eviction_log)
+            spec = ExperimentSpec(
+                name=f"fig14_{mode}_{name}",
+                pool=lambda mode=mode: _cluster(mode),
+                workload=lambda s: make_workload(
+                    n=n, rps=rps, slo_scale=slo_scale, seed=s,
+                    arrival="mooncake"),
+                plane=_plane(mode, name),
+                seeds=(seed,),
+                sim_kw=dict(spot_seed=SPOT_SEED))
+            res = run_experiment(spec)[0]
+            s = results[(mode, name)] = res.summary
             if name == "goodserve" and mode != "ondemand":
-                # where did each SLO tier land?  The risk surcharge
-                # should keep tight-slack work off preemptible capacity
-                # while relaxed long-tail work soaks it up.
-                spot_iids = {g.iid for g in cluster.instances
-                             if g.hw.is_spot}
-                for tier in ("tight", "relaxed"):
-                    sel = [r for r in out if r.req.tier == tier]
-                    on = sum(1 for r in sel
-                             if any(gid in spot_iids
-                                    for _, ev, gid in r.journey
-                                    if ev == "enq"))
-                    s[f"spot_share_{tier}"] = on / max(len(sel), 1)
+                _spot_share(res, s)
                 emit(f"fig14_{mode}_goodserve_spot_share", 0.0,
                      f"tight={s['spot_share_tight']:.3f} "
                      f"relaxed={s['spot_share_relaxed']:.3f}")
-            results[(mode, name)] = s
-            emit(f"fig14_{mode}_{name}", us,
+            emit(spec.name, res.us,
                  f"goodput={s['goodput_rps']:.3f}rps "
                  f"viol={s['violation_ratio']:.3f} "
                  f"preempt_viol={s['preempt_violations']} "

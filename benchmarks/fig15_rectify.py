@@ -26,12 +26,13 @@ replacement-only controller):
   * gs_static      — GoodServe predicting once at admission (today's
                      router), spot surcharge from ORACLE rates: the
                      strongest non-rectifying configuration,
-  * gs_rectified   — the full rectified control plane: OnlineSurvival
-                     conditional remaining-length (router risk checks,
-                     migration triggers, and admission control all
-                     consume it) + Gamma-Poisson eviction rates learned
-                     from observed notices (wrong prior, no oracle
-                     anywhere),
+  * gs_rectified   — the full rectified control plane: ONE shared
+                     Beliefs bundle (OnlineSurvival conditional
+                     remaining-length + Gamma-Poisson eviction rates
+                     learned from observed notices; wrong prior, no
+                     oracle anywhere) consumed by routing, risk checks,
+                     and admission, fed exactly once per completion by
+                     the plane,
   * gs_rect_oraclerates — rectified lengths but oracle eviction rates:
                      isolates what rate *estimation* costs,
   * gs_oracle      — OracleRouter (ground-truth lengths + oracle
@@ -43,18 +44,21 @@ placement with the *estimated* eviction rate keeps SLO violations
 within 10% of the oracle-rate run — while the router never reads the
 catalog's oracle rate field (source-scan enforced in
 tests/test_observability.py).
+
+Each configuration is one ``ExperimentSpec`` through ``run_experiment``;
+the figure keeps its factories, the posterior readout, and the
+assertions.
 """
 from __future__ import annotations
 
-import dataclasses
-
-from benchmarks.common import emit, timed
+from benchmarks.common import emit, gpu as _gpu, spot_gpu
 from benchmarks.fig13_autoscale import FamilyMeanPredictor
+from repro.bench import ExperimentSpec, run_experiment
 from repro.cluster import hardware as hwlib
-from repro.cluster.simulator import Cluster, Instance, Simulator
+from repro.cluster.simulator import Cluster, Instance
 from repro.cluster.workload import make_workload
+from repro.core.control_plane import Beliefs, ControlPlane
 from repro.core.controller import AdmissionController, ReactivePoolController
-from repro.core.metrics import summarize_elastic
 from repro.core.rectify import (EvictionRateEstimator, FixedEvictionRates,
                                 OnlineSurvival)
 from repro.core.router import make_router
@@ -63,7 +67,6 @@ BASELINES = ["random", "least_request", "preble"]
 GS_MODES = ["gs_static", "gs_rectified", "gs_rect_oraclerates", "gs_oracle"]
 WORKLOADS = ["steady", "drift"]
 
-MAX_SEQS = 32
 WARMUP_S = 12.0
 EVICTIONS_PER_HOUR = 30.0     # the provider's TRUE churn
 WRONG_PRIOR = 6.0             # the operator's honest-but-wrong belief
@@ -72,16 +75,8 @@ SPOT_SEED = 16                # shared base-pool preemption trace
 DRIFT = {"at": 0.45, "out_mult": 3.0}
 
 
-def _gpu(name: str) -> hwlib.HardwareSpec:
-    return dataclasses.replace(hwlib.catalog(name), max_seqs=MAX_SEQS)
-
-
-def _spot(name: str) -> hwlib.HardwareSpec:
-    return dataclasses.replace(
-        hwlib.spot_variant(hwlib.GPUS[name],
-                           evictions_per_hour=EVICTIONS_PER_HOUR,
-                           grace_s=GRACE_S),
-        max_seqs=MAX_SEQS)
+def _spot(name: str):
+    return spot_gpu(name, EVICTIONS_PER_HOUR, GRACE_S)
 
 
 def _cluster() -> Cluster:
@@ -112,24 +107,31 @@ def _controller() -> ReactivePoolController:
         warmup_override=WARMUP_S)
 
 
-def _build(label: str, cluster: Cluster):
-    """(router, admission) for one configuration label."""
-    pred = FamilyMeanPredictor()
-    if label in BASELINES:
-        return make_router(label), None
-    if label == "gs_oracle":
-        return make_router("oracle", evict_rates=_true_rates(cluster)), None
-    rect = None if label == "gs_static" else OnlineSurvival()
-    if label == "gs_rectified":
-        rates = EvictionRateEstimator(prior_rate_per_hour=WRONG_PRIOR)
-    else:
-        rates = _true_rates(cluster)
-    router = make_router("goodserve", predictor=pred, rectifier=rect,
-                         evict_rates=rates)
-    # admission shares the SAME rectifier (idempotent feedback), so the
-    # shed decision drifts with reality too
-    adm = AdmissionController(pred, margin=3.0, rectifier=rect)
-    return router, adm
+def _plane(label: str):
+    """ControlPlane factory for one configuration label."""
+    def build(cluster):
+        if label in BASELINES:
+            return ControlPlane(router=make_router(label),
+                                pool=_controller())
+        if label == "gs_oracle":
+            return ControlPlane(
+                router=make_router("oracle",
+                                   evict_rates=_true_rates(cluster)),
+                pool=_controller())
+        # one shared Beliefs bundle: router, risk checks, and admission
+        # all consume it; the plane feeds it exactly once per completion
+        beliefs = Beliefs(
+            predictor=FamilyMeanPredictor(),
+            rectifier=None if label == "gs_static" else OnlineSurvival(),
+            evict_rates=(EvictionRateEstimator(
+                prior_rate_per_hour=WRONG_PRIOR)
+                if label == "gs_rectified" else _true_rates(cluster)))
+        return ControlPlane(
+            router=make_router("goodserve", beliefs=beliefs),
+            pool=_controller(),
+            admission=AdmissionController(beliefs=beliefs, margin=3.0),
+            beliefs=beliefs)
+    return build
 
 
 def run(n: int = 2200, rps: float = 8.0, slo_scale=(1.5, 4.0),
@@ -137,24 +139,19 @@ def run(n: int = 2200, rps: float = 8.0, slo_scale=(1.5, 4.0),
     results = {}
     for workload in WORKLOADS:
         for label in BASELINES + GS_MODES:
-            reqs = make_workload(
-                n=n, rps=rps, slo_scale=slo_scale, seed=seed,
-                arrival="mooncake",
-                drift=DRIFT if workload == "drift" else None)
-            span = max(r.arrival for r in reqs)
-            cluster = _cluster()
-            router, adm = _build(label, cluster)
-            sim = Simulator(cluster, router, reqs, pool=_controller(),
-                            admission=adm, spot_seed=SPOT_SEED)
-            (out, dur), us = timed(sim.run)
-            s = summarize_elastic(out, dur, cluster)
-            good = sum(1 for r in out if r.finished_at is not None
-                       and (r.finished_at - r.req.arrival) <= r.req.slo)
-            s["goodput_rps"] = good / span
-            s["goodput_per_usd"] = good / max(s["cost_usd"], 1e-9)
-            s["n_eviction_notices"] = len(sim.eviction_log)
-            results[(workload, label)] = s
-            emit(f"fig15_{workload}_{label}", us,
+            spec = ExperimentSpec(
+                name=f"fig15_{workload}_{label}",
+                pool=_cluster,
+                workload=lambda s, workload=workload: make_workload(
+                    n=n, rps=rps, slo_scale=slo_scale, seed=s,
+                    arrival="mooncake",
+                    drift=DRIFT if workload == "drift" else None),
+                plane=_plane(label),
+                seeds=(seed,),
+                sim_kw=dict(spot_seed=SPOT_SEED))
+            res = run_experiment(spec)[0]
+            s = results[(workload, label)] = res.summary
+            emit(spec.name, res.us,
                  f"goodput={s['goodput_rps']:.3f}rps "
                  f"viol={s['violation_ratio']:.3f} "
                  f"pred_mae={s['pred_mae_tokens']:.0f}tok "
@@ -162,7 +159,7 @@ def run(n: int = 2200, rps: float = 8.0, slo_scale=(1.5, 4.0),
                  f"evictions={s['n_eviction_notices']} "
                  f"migr={s['migrations']}")
             if label == "gs_rectified":
-                est = router.evict_rates
+                est = res.router.evict_rates
                 for name in sorted(est.exposure_hours):
                     obs = est.observed_rate(name)
                     emit(f"fig15_{workload}_posterior_{name}", 0.0,

@@ -1,12 +1,15 @@
 """Fig. 2: motivational comparison — 600 requests at 10 rps on the
 4-GPU heterogeneous testbed, 100 input tokens, outputs U[100, 500],
-E2E-SLO 6 s.  Reproduces the inferiority of SLO-unaware routing."""
+E2E-SLO 6 s.  Reproduces the inferiority of SLO-unaware routing.
+One ``ExperimentSpec`` per router through ``run_experiment`` (the CI
+smoke's harness coverage for a plain fixed-pool figure)."""
 from __future__ import annotations
 
 import numpy as np
 
-from benchmarks.common import emit, timed
-from repro.cluster.simulator import Simulator, build_paper_cluster
+from benchmarks.common import emit
+from repro.bench import ExperimentSpec, run_experiment
+from repro.cluster.simulator import build_paper_cluster
 from repro.cluster.workload import Request
 from repro.core.metrics import summarize
 from repro.core.router import make_router
@@ -29,19 +32,23 @@ def fig2_workload(n=600, rps=10.0, slo=6.0, seed=0):
             for i in range(n)]
 
 
-def run(n: int = 600):
+def run(n: int = 600, seed: int = 0):
     results = {}
     for name in ["random", "round_robin", "least_request", "lowest_tpm",
                  "prefix_cache", "preble", "llumnix", "goodserve", "oracle"]:
-        reqs = fig2_workload(n=n)
-        cluster = build_paper_cluster()
-        router = make_router(
-            name, predictor=MeanPredictor() if name == "goodserve" else None)
-        sim = Simulator(cluster, router, reqs, tau=50)
-        (out, dur), us = timed(sim.run)
-        s = summarize(out, dur)
-        results[name] = s
-        emit(f"fig2_{name}", us,
+        spec = ExperimentSpec(
+            name=f"fig2_{name}",
+            pool=build_paper_cluster,
+            workload=lambda s: fig2_workload(n=n, seed=s),
+            plane=lambda cluster, name=name: make_router(
+                name, predictor=(MeanPredictor()
+                                 if name == "goodserve" else None)),
+            seeds=(seed,),
+            sim_kw=dict(tau=50),
+            summarize=lambda out, dur, cluster: summarize(out, dur))
+        res = run_experiment(spec)[0]
+        s = results[name] = res.summary
+        emit(spec.name, res.us,
              f"goodput={s['goodput_rps']:.3f}rps "
              f"viol={s['violation_ratio']:.3f}")
     best_baseline = max(

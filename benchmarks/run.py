@@ -1,23 +1,35 @@
 """Benchmark harness: one module per paper figure/table + the roofline
 report.  Prints ``name,us_per_call,derived`` CSV rows (harness contract).
 
-Usage:  PYTHONPATH=src python -m benchmarks.run [--only fig2,fig9] [--fast]
+Per-figure argument parsing is defined ONCE: every suite declares its
+slow/fast kwargs in the ``_Suite`` table below, and the shared
+``--fast`` / ``--seed`` / ``--only`` flags are applied uniformly (the
+scenario figures run through ``repro.bench.run_experiment``, so a
+``--seed`` override reaches every spec the same way).
+
+Usage:  PYTHONPATH=src python -m benchmarks.run \
+            [--only fig2,fig13] [--fast] [--seed 7]
 """
 from __future__ import annotations
 
 import argparse
+import dataclasses
 import sys
 import time
 import traceback
+from typing import Callable
 
 
-def main() -> None:
-    ap = argparse.ArgumentParser()
-    ap.add_argument("--only", default="")
-    ap.add_argument("--fast", action="store_true",
-                    help="smaller workloads / fewer epochs")
-    args = ap.parse_args()
+@dataclasses.dataclass
+class _Suite:
+    fn: Callable                      # the figure's run()
+    kw: dict = dataclasses.field(default_factory=dict)
+    fast_kw: dict = dataclasses.field(default_factory=dict)
+    seedable: bool = False            # accepts the shared --seed flag
+    note: str = ""
 
+
+def _suites(fast: bool) -> dict:
     from benchmarks import (fig1_iteration_latency, fig2_motivation,
                             fig6_end_to_end, fig7_ablation, fig8_predictor,
                             fig9_migration, fig10_sensitivity,
@@ -25,45 +37,69 @@ def main() -> None:
                             fig13_autoscale, fig14_spot, fig15_rectify,
                             roofline)
 
-    n_sim = 200 if args.fast else 400
-    n_fig2 = 300 if args.fast else 600
-    epochs = 12 if args.fast else 40
+    n_sim = 200 if fast else 400
+    epochs = 12 if fast else 40
 
-    suites = {
-        "fig1": lambda: fig1_iteration_latency.run(),
-        "fig2": lambda: fig2_motivation.run(n=n_fig2),
-        "fig6": lambda: fig6_end_to_end.run(
-            n=n_sim, scales=(1.0, 2.0, 3.0) if args.fast
-            else (1.0, 1.5, 2.0, 2.5, 3.0)),
-        "fig7": lambda: fig7_ablation.run(n=n_sim),
-        "fig8": lambda: fig8_predictor.run(epochs=epochs),
-        "fig9": lambda: fig9_migration.run(),
-        "fig10": lambda: fig10_sensitivity.run(n=min(n_sim, 300),
-                                               epochs=max(epochs - 10, 8)),
-        "fig11": lambda: fig11_overhead.run(),
+    return {
+        "fig1": _Suite(fig1_iteration_latency.run),
+        "fig2": _Suite(fig2_motivation.run, kw=dict(n=600),
+                       fast_kw=dict(n=300), seedable=True),
+        "fig6": _Suite(fig6_end_to_end.run,
+                       kw=dict(n=n_sim,
+                               scales=(1.0, 1.5, 2.0, 2.5, 3.0)),
+                       fast_kw=dict(scales=(1.0, 2.0, 3.0))),
+        "fig7": _Suite(fig7_ablation.run, kw=dict(n=n_sim)),
+        "fig8": _Suite(fig8_predictor.run, kw=dict(epochs=epochs)),
+        "fig9": _Suite(fig9_migration.run),
+        "fig10": _Suite(fig10_sensitivity.run,
+                        kw=dict(n=min(n_sim, 300),
+                                epochs=max(epochs - 10, 8))),
+        "fig11": _Suite(fig11_overhead.run),
         # fig12's sim is cheap (~40s); at n=40 the workflow sample is too
         # small for stable router ordering, so fast mode keeps n=60
-        "fig12": lambda: fig12_workflows.run(),
+        "fig12": _Suite(fig12_workflows.run, seedable=True),
         # fast mode halves the diurnal trace (first swell only): the
         # scale-up path is exercised, the trough-side drain is not
-        "fig13": lambda: fig13_autoscale.run(n=1100 if args.fast else 2200),
+        "fig13": _Suite(fig13_autoscale.run, kw=dict(n=2200),
+                        fast_kw=dict(n=1100), seedable=True),
         # fast mode halves the trace; the preemption rate is per-hour, so
         # the shorter span still sees eviction notices (asserted in-run)
-        "fig14": lambda: fig14_spot.run(n=1100 if args.fast else 2200),
+        "fig14": _Suite(fig14_spot.run, kw=dict(n=2200),
+                        fast_kw=dict(n=1100), seedable=True),
         # fast mode shortens the trace but keeps the mid-run drift point
         # (a fraction of the span, not an absolute time)
-        "fig15": lambda: fig15_rectify.run(n=1000 if args.fast else 2200),
-        "roofline": lambda: roofline.run(),
+        "fig15": _Suite(fig15_rectify.run, kw=dict(n=2200),
+                        fast_kw=dict(n=1000), seedable=True),
+        "roofline": _Suite(roofline.run),
     }
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default="",
+                    help="comma-separated suite names (default: all)")
+    ap.add_argument("--fast", action="store_true",
+                    help="smaller workloads / fewer epochs")
+    ap.add_argument("--seed", type=int, default=None,
+                    help="override the workload seed of every "
+                         "seed-accepting scenario suite")
+    args = ap.parse_args()
+
+    suites = _suites(args.fast)
     only = [s for s in args.only.split(",") if s]
     failed = []
-    for name, fn in suites.items():
+    for name, suite in suites.items():
         if only and name not in only:
             continue
+        kw = dict(suite.kw)
+        if args.fast:
+            kw.update(suite.fast_kw)
+        if suite.seedable and args.seed is not None:
+            kw["seed"] = args.seed
         print(f"# --- {name} ---", flush=True)
         t0 = time.time()
         try:
-            fn()
+            suite.fn(**kw)
         except Exception:
             failed.append(name)
             traceback.print_exc()

@@ -17,6 +17,7 @@ import numpy as np
 from repro.cluster import hardware as hwlib
 from repro.cluster.simulator import Cluster, Instance, Simulator
 from repro.cluster.workload import make_workload
+from repro.core.control_plane import ControlPlane
 from repro.core.controller import (AdmissionController,
                                    ForecastPoolController,
                                    ReactivePoolController)
@@ -56,9 +57,13 @@ def main():
                              arrival_kw=dict(period=200.0, amplitude=0.85))
         cluster, ctrl = build(mode)
         pred = MeanPredictor()
-        router = GoodServeRouter(pred)
-        sim = Simulator(cluster, router, reqs, pool=ctrl,
-                        admission=AdmissionController(pred, margin=3.0))
+        # the new-style wiring: ONE gateway object owns routing,
+        # admission, and scaling; the simulator just executes its
+        # decisions
+        plane = ControlPlane(
+            router=GoodServeRouter(pred), pool=ctrl,
+            admission=AdmissionController(pred, margin=3.0))
+        sim = Simulator(cluster, plane, reqs)
         out, dur = sim.run()
         s = summarize_elastic(out, dur, cluster)
         print(f"\n== {mode} pool ==")

@@ -22,6 +22,7 @@ import dataclasses
 from repro.cluster import hardware as hwlib
 from repro.cluster.simulator import Cluster, Instance, Simulator
 from repro.cluster.workload import make_workload
+from repro.core.control_plane import Beliefs, ControlPlane
 from repro.core.controller import AdmissionController, ReactivePoolController
 from repro.core.metrics import summarize_elastic
 from repro.core.predictor import HistoryPredictor
@@ -81,10 +82,17 @@ def main():
                  else FixedEvictionRates({g.hw.name: TRUE_RATE
                                           for g in cluster.instances
                                           if g.hw.is_spot}))
-        router = GoodServeRouter(pred, rectifier=rect, evict_rates=rates)
-        adm = AdmissionController(pred, margin=3.0, rectifier=rect)
-        sim = Simulator(cluster, router, reqs, pool=controller(),
-                        admission=adm, spot_seed=16)
+        # ONE shared Beliefs bundle: routing, risk checks, and the
+        # admission gate all consume the same estimation state, and the
+        # plane feeds it exactly once per completion/snapshot
+        beliefs = Beliefs(predictor=pred, rectifier=rect,
+                          evict_rates=rates)
+        plane = ControlPlane(
+            router=GoodServeRouter(beliefs=beliefs),
+            pool=controller(),
+            admission=AdmissionController(beliefs=beliefs, margin=3.0),
+            beliefs=beliefs)
+        sim = Simulator(cluster, plane, reqs, spot_seed=16)
         out, dur = sim.run()
         s = summarize_elastic(out, dur, cluster)
         print(f"== {mode} ==")

@@ -21,6 +21,7 @@ import numpy as np
 from repro.cluster import hardware as hwlib
 from repro.cluster.simulator import Cluster, Instance, Simulator
 from repro.cluster.workload import make_workload
+from repro.core.control_plane import ControlPlane
 from repro.core.controller import ReactivePoolController
 from repro.core.metrics import summarize_elastic
 from repro.core.router import GoodServeRouter
@@ -67,7 +68,8 @@ def main():
         cluster, ctrl = build(mode)
         router = GoodServeRouter(MeanPredictor(),
                                  spot_aware=(mode == "aware"))
-        sim = Simulator(cluster, router, reqs, pool=ctrl, spot_seed=16)
+        plane = ControlPlane(router=router, pool=ctrl)
+        sim = Simulator(cluster, plane, reqs, spot_seed=16)
         out, dur = sim.run()
         s = summarize_elastic(out, dur, cluster)
         print(f"\n== {mode} pool ==")

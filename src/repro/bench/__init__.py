@@ -1,0 +1,5 @@
+"""Declarative experiment harness over the ControlPlane API."""
+from repro.bench.harness import (ExperimentResult, ExperimentSpec,
+                                 run_experiment)
+
+__all__ = ["ExperimentSpec", "ExperimentResult", "run_experiment"]

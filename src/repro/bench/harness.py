@@ -1,0 +1,134 @@
+"""Declarative experiment harness: one spec, one runner.
+
+Every scenario benchmark used to hand-wire the same ~200 lines: build a
+workload, build a cluster, build router + controller + admission, thread
+them through ``Simulator``, time the run, recompute goodput over the
+shared arrival span, cost, goodput-per-dollar...  A figure is really
+just (pool, workload, plane, seeds) plus its assertions — so that is
+what :class:`ExperimentSpec` declares, and :func:`run_experiment` does
+the rest through the :class:`~repro.core.control_plane.ControlPlane`
+API.
+
+Spec fields are FACTORIES, not instances: policies attach exactly once,
+so every seed (and every configuration) must get a fresh plane.  The
+workload factory takes the seed; the plane factory takes the freshly
+built cluster (some policies — oracle rate tables — are derived from
+it).
+
+    spec = ExperimentSpec(
+        name="fig14_spot_aware_goodserve",
+        pool=lambda: Cluster([...]),
+        workload=lambda seed: make_workload(n=2200, seed=seed, ...),
+        plane=lambda cluster: ControlPlane(
+            router=GoodServeRouter(beliefs=b),
+            pool=ReactivePoolController(...),
+            admission=AdmissionController(beliefs=b)),
+        seeds=(4,),
+        sim_kw=dict(spot_seed=16))
+    result = run_experiment(spec)[0]
+    assert result.summary["goodput_per_usd"] > ...
+
+The summary carries ``summarize_elastic`` (plus ``goodput_rps`` /
+``goodput_per_usd`` recomputed over the shared *arrival span*, so
+run-duration tails cannot distort cross-configuration comparisons, and
+``n_eviction_notices``), or ``summarize_workflows`` when the workload
+factory returns ``(requests, workflows)``.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Callable, Dict, List, Mapping, Optional, Sequence
+
+from repro.cluster.simulator import Cluster, Simulator
+from repro.core.control_plane import ControlPlane
+from repro.core.metrics import summarize_elastic, summarize_workflows
+
+
+@dataclasses.dataclass
+class ExperimentSpec:
+    """One benchmark configuration, declaratively.
+
+    * ``name``     — row label (figure_mode_router by convention),
+    * ``pool``     — cluster factory: () -> Cluster,
+    * ``workload`` — trace factory: seed -> requests, or
+      (requests, workflows) for DAG traces,
+    * ``plane``    — control-plane factory: cluster -> ControlPlane
+      (a bare router Policy is accepted and wrapped),
+    * ``seeds``    — one run per seed,
+    * ``sim_kw``   — extra Simulator knobs (tau, spot_seed,
+      preemptions, fail_at, ...),
+    * ``summarize`` — optional override: (out, dur, cluster) -> dict
+      replaces the default elastic/workflow summary entirely.
+    """
+    name: str
+    pool: Callable[[], Cluster]
+    workload: Callable[[int], Any]
+    plane: Callable[[Cluster], Any]
+    seeds: Sequence[int] = (0,)
+    sim_kw: Mapping[str, Any] = dataclasses.field(default_factory=dict)
+    summarize: Optional[Callable] = None
+
+
+@dataclasses.dataclass
+class ExperimentResult:
+    """One run's outcome plus the handles a figure may want to probe
+    (learned posteriors, journeys, controller event logs, the decision
+    log)."""
+    name: str
+    seed: int
+    summary: Dict[str, Any]
+    requests: list                  # SimRequests, post-run
+    workflows: Optional[list]
+    duration: float
+    us: float                       # wall-clock microseconds of sim.run
+    cluster: Cluster
+    plane: ControlPlane
+    sim: Simulator
+
+    @property
+    def router(self):
+        return self.plane.router
+
+
+def _summarize(out, dur, cluster, reqs, span, workflows):
+    if workflows is not None:
+        return summarize_workflows(out, dur)
+    s = summarize_elastic(out, dur, cluster)
+    # goodput over the shared arrival span: run-duration tails (one
+    # straggler request) must not distort cross-config comparisons
+    good = sum(1 for r in out if r.finished_at is not None
+               and (r.finished_at - r.req.arrival) <= r.req.slo)
+    s["goodput_rps"] = good / span
+    s["goodput_per_usd"] = good / max(s["cost_usd"], 1e-9)
+    return s
+
+
+def run_experiment(spec: ExperimentSpec) -> List[ExperimentResult]:
+    """Build, run, and summarize one spec — once per seed."""
+    results = []
+    for seed in spec.seeds:
+        wl = spec.workload(seed)
+        reqs, wfs = wl if isinstance(wl, tuple) else (wl, None)
+        # workflow steps' arrival fields are rewritten at release time;
+        # take the span before the run
+        span = max((r.arrival for r in reqs), default=1.0)
+        cluster = spec.pool()
+        plane = spec.plane(cluster)
+        if not isinstance(plane, ControlPlane):
+            plane = ControlPlane(router=plane)
+        sim = Simulator(cluster, plane, reqs, workflows=wfs,
+                        **dict(spec.sim_kw))
+        t0 = time.perf_counter()
+        out, dur = sim.run()
+        us = (time.perf_counter() - t0) * 1e6
+        if spec.summarize is not None:
+            s = dict(spec.summarize(out, dur, cluster))
+        else:
+            s = _summarize(out, dur, cluster, reqs, span, wfs)
+        s["n_eviction_notices"] = len(sim.eviction_log)
+        results.append(ExperimentResult(
+            name=spec.name, seed=seed, summary=s, requests=out,
+            workflows=wfs, duration=dur, us=us, cluster=cluster,
+            plane=plane, sim=sim))
+    return results

@@ -13,6 +13,15 @@ exclusively through ``Cluster.view(t)`` -> ``ClusterView`` snapshots
 (src/repro/core/observability.py), so proxy-visibility is enforced by
 construction rather than by comment.
 
+The simulator talks to exactly ONE policy object: a
+:class:`~repro.core.control_plane.ControlPlane` facade.  Cluster events
+are reported through the plane's typed event API and the simulator
+merely executes the :class:`~repro.core.control_plane.Decision` values
+the plane returns (enforced by the tests/test_observability.py source
+scan: this module names no concrete policy class).  The legacy
+``Simulator(cluster, router, reqs, pool=..., admission=...)`` signature
+keeps working — the constructor shim maps those kwargs onto a plane.
+
 The simulator also supports:
   * SLO-risk checks every tau decode iterations per request (Sec. 3.4),
   * token-ID / KV-cache migration with explicit network cost (Fig. 9),
@@ -28,8 +37,8 @@ The simulator also supports:
     provision time and joining after the hardware's warmup latency,
     ``drain()`` stopping admissions while running requests finish (or
     migrate out), per-instance $/hr accrual (``Cluster.cost_usd``), and
-    optional PoolController / AdmissionController hooks driven from the
-    event loop (arrivals, completions, ticks),
+    pool-scaling / admission policies driven through the plane's event
+    hooks (arrivals, completions, ticks),
   * deterministic seeds for reproducibility.
 """
 from __future__ import annotations
@@ -38,12 +47,13 @@ import dataclasses
 import heapq
 import itertools
 from collections import OrderedDict, deque
-from typing import Callable, Dict, List, Optional, Sequence, Tuple
+from typing import Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
 from repro.cluster import hardware as hwlib
 from repro.cluster.workload import Request, Workflow
+from repro.core import control_plane as cplib
 from repro.core.estimator import EMAEstimator
 from repro.core import migration as miglib
 from repro.core.observability import ClusterView
@@ -236,25 +246,34 @@ class Cluster:
 
 
 class Simulator:
-    def __init__(self, cluster: Cluster, router, requests: Sequence[Request],
+    def __init__(self, cluster: Cluster, router=None,
+                 requests: Sequence[Request] = (),
                  *, tau: int = 50, migration_mode: str = "token_id",
                  fail_at: Optional[Dict[int, float]] = None,
                  max_time: float = 86400.0,
                  workflows: Optional[Sequence[Workflow]] = None,
-                 pool=None, admission=None,
+                 pool=None, admission=None, plane=None,
                  preemptions: bool = True, spot_seed: int = 0):
         self.cluster = cluster
-        self.router = router
+        # single policy surface: one ControlPlane.  New-style callers
+        # pass the plane (second positional or ``plane=``); the legacy
+        # (router, pool=, admission=) kwargs are mapped onto a fresh
+        # plane so existing constructors keep working.
+        if isinstance(router, cplib.ControlPlane):
+            plane, router = router, None
+        if plane is None:
+            plane = cplib.ControlPlane(router=router, pool=pool,
+                                       admission=admission)
+        elif router is not None or pool is not None or admission is not None:
+            raise TypeError(
+                "pass either a ControlPlane or the legacy "
+                "router/pool/admission pieces, not both")
+        self.plane = plane
         self.requests = [SimRequest(req=r) for r in requests]
         self.tau = tau
         self.migration_mode = migration_mode
         self.fail_at = fail_at or {}
         self.max_time = max_time
-        # elastic control plane (optional): the PoolController resizes the
-        # heterogeneous pool on ticks; the AdmissionController gates every
-        # arrival and sheds doomed work early.
-        self.pool = pool
-        self.admission = admission
         self._events: list = []
         self._seq = itertools.count()
         self.now = 0.0
@@ -290,11 +309,51 @@ class Simulator:
                 self._wf_waiting[(r.wid, r.step)] = len(r.parents)
                 for p in r.parents:
                     self._wf_children.setdefault((r.wid, p), []).append(sr)
-        router.attach(self)
-        if self.pool is not None:
-            self.pool.attach(self)
-        if self.admission is not None:
-            self.admission.attach(self)
+        self.plane.attach(self)
+
+    # -- decision execution --------------------------------------------------
+
+    def _execute(self, d, t: float):
+        """Run one plane decision; the return value is sent back into
+        the yielding policy generator (instance id for Provision,
+        acceptance for Drain)."""
+        self.plane.note_executed(d)
+        if isinstance(d, cplib.Route):
+            if d.sr is None:
+                raise TypeError(f"{d!r} names no request: Route.sr is "
+                                f"required on executed decisions")
+            self.enqueue(d.sr, d.gid, t)
+            return d.gid
+        if isinstance(d, cplib.Migrate):
+            self.migrate(d.sr, d.dst, t, mode=d.mode)
+            return None
+        if isinstance(d, cplib.Provision):
+            return self.provision(d.hw, t, warmup_s=d.warmup_s)
+        if isinstance(d, cplib.Drain):
+            return self.drain(d.gid, t, migrate_running=d.mode)
+        if isinstance(d, (cplib.Park, cplib.Shed)):
+            if d.sr is None:
+                raise TypeError(f"{d!r} names no request: sr is "
+                                f"required on executed decisions")
+            if isinstance(d, cplib.Park):
+                self._orphans.append(d.sr)
+            else:
+                self._shed(d.sr, t, tag=d.reason)
+            return None
+        raise TypeError(f"unknown decision {d!r}")
+
+    def _drive(self, decisions, t: float):
+        """Exhaust one plane event handler, executing each decision as
+        it is yielded (so later policy logic sees earlier actuations)."""
+        if decisions is None:
+            return
+        result = None
+        while True:
+            try:
+                d = decisions.send(result)
+            except StopIteration:
+                return
+            result = self._execute(d, t)
 
     # -- event plumbing -----------------------------------------------------
 
@@ -376,11 +435,11 @@ class Simulator:
             return False
         g.state = "draining"
         for sr in list(g.queue):
-            dst = self.router.route(sr, t)
+            dst = self.plane.route(sr, t)
             self.migrate(sr, dst, t, mode="token_id")
         if migrate_running:
             for sr in list(g.running):
-                dst = self.router.route(sr, t)
+                dst = self.plane.route(sr, t)
                 self.migrate(sr, dst, t, mode=migrate_running)
         self._maybe_retire(gid, t)
         return True
@@ -397,7 +456,7 @@ class Simulator:
         workflow missing one step can never meet its deadline, so its
         remaining work is doomed too.  ``tag`` distinguishes admission
         rejection ("shed") from capacity loss ("lost") in the journey,
-        so metrics don't blame the AdmissionController for dead pools."""
+        so metrics don't blame the admission path for dead pools."""
         stack = [sr]
         while stack:
             s = stack.pop()
@@ -409,19 +468,11 @@ class Simulator:
             stack.extend(self._wf_children.get((s.req.wid, s.req.step), []))
 
     def _submit(self, sr: SimRequest, t: float):
-        """Route an admitted arrival — or, when nothing in the pool can
-        take it, park it for warming capacity / fail it as lost.  Keeps
-        routers from being handed an empty target list after the whole
-        pool is reclaimed."""
-        if any(o.alive and o.state in ("active", "draining", "evicting")
-               for o in self.cluster.instances):
-            gid = self.router.route(sr, t)
-            self.enqueue(sr, gid, t)
-        elif any(o.state in ("provisioning", "warming")
-                 for o in self.cluster.instances):
-            self._orphans.append(sr)
-        else:
-            self._shed(sr, t, tag="lost")
+        """Re-disposition a displaced request (migration target died
+        mid-transfer): the plane decides Route / Park / Shed("lost"),
+        the simulator executes.  Keeps routers from being handed an
+        empty target list after the whole pool is reclaimed."""
+        self._execute(self.plane.disposition(sr, t), t)
 
     def _dispose_orphans(self, t: float):
         """Re-disposition parked requests whenever pool membership
@@ -435,7 +486,7 @@ class Simulator:
             return
         if any(o.alive and o.state in ("active", "draining", "evicting")
                for o in self.cluster.instances):
-            self.router.on_failure(-1, orphans, t)
+            self._drive(self.plane.on_failure(-1, orphans, t), t)
         elif any(o.state in ("provisioning", "warming")
                  for o in self.cluster.instances):
             self._orphans = orphans
@@ -543,17 +594,13 @@ class Simulator:
                 sr.finished_at = t_next
                 sr.journey.append((round(t_next, 2), "done", gid))
                 g.note_session(sr.req, sr.context_len)
-                self.router.on_request_done(sr, t_next)
-                if self.pool is not None:
-                    self.pool.on_request_done(sr, t_next)
-                if self.admission is not None:
-                    # close the predict-and-rectify loop: admission's
-                    # rectifier learns from every completion even under
-                    # routers that keep no length model of their own
-                    self.admission.on_request_done(sr, t_next)
+                # completion fans out through the plane: policy hooks
+                # plus exactly-once Beliefs feedback (survival curves,
+                # online predictors)
+                self._drive(self.plane.on_request_done(sr, t_next), t_next)
                 self._release_children(sr, t_next)
             for sr in at_risk:
-                self.router.on_risk_check(sr, t_next)
+                self._drive(self.plane.on_step_done(sr, t_next), t_next)
 
         if g.running or g.queue:
             self._push(t_next, "step", gid)
@@ -593,7 +640,7 @@ class Simulator:
             if any(o.alive and o.state in ("active", "draining",
                                            "evicting")
                    for o in self.cluster.instances):
-                self.router.on_failure(gid, victims, t)
+                self._drive(self.plane.on_failure(gid, victims, t), t)
             else:                   # park or lose, never crash the router
                 self._orphans.extend(victims)
         self._dispose_orphans(t)
@@ -629,8 +676,9 @@ class Simulator:
         g.eviction_deadline = t + g.hw.grace_s
         self.eviction_log.append((t, gid))
         self._push(g.eviction_deadline, "evict_kill", gid)
-        if self.pool is not None:
-            self.pool.on_eviction(gid, t)
+        # the plane may buy a replacement whose warmup hides inside the
+        # victim's grace window (Provision decisions executed here)
+        self._drive(self.plane.on_eviction_notice(gid, t), t)
         # evacuation needs a surviving target: accepting, or at least an
         # alive draining instance (it still finishes the work it holds —
         # the same fallback failure resubmission uses)
@@ -640,12 +688,12 @@ class Simulator:
         for sr in list(g.queue):
             sr.preempted = True
             sr.journey.append((round(t, 2), "evict", gid))
-            dst = self.router.route(sr, t)
+            dst = self.plane.route(sr, t)
             self.migrate(sr, dst, t, mode="token_id")
         for sr in list(g.running):
             sr.preempted = True
             sr.journey.append((round(t, 2), "evict", gid))
-            dst = self.router.route(sr, t)
+            dst = self.plane.route(sr, t)
             mode = miglib.plan_evacuation(
                 self.cluster.net, self.cluster.instances[dst].hw, g.fp,
                 sr.context_len, g.eviction_deadline - t,
@@ -674,7 +722,7 @@ class Simulator:
             if any(o.accepting or (o.alive and o.state in
                                    ("draining", "evicting"))
                    for o in self.cluster.instances):
-                self.router.on_failure(gid, victims, t)
+                self._drive(self.plane.on_failure(gid, victims, t), t)
             else:
                 # park the victims: a replacement the controller bought
                 # at notice time may still be warming — _dispose_orphans
@@ -707,13 +755,7 @@ class Simulator:
                 sr = payload
                 if sr.state == "failed":     # shed transitively meanwhile
                     continue
-                if self.pool is not None:
-                    self.pool.on_arrival(t)
-                if (self.admission is not None
-                        and not self.admission.admit(sr, t)):
-                    self._shed(sr, t)
-                else:
-                    self._submit(sr, t)
+                self._execute(self.plane.on_arrival(sr, t), t)
             elif kind == "step":
                 self._step(payload, t)
             elif kind == "migrate_arrive":
@@ -747,12 +789,10 @@ class Simulator:
                 if g.state in ("provisioning", "warming"):
                     g.state = "active"
                     self._arm_eviction(g.iid, t)
-                    self.router.on_instance_join(g.iid, t)
+                    self._drive(self.plane.on_instance_join(g.iid, t), t)
                     self._dispose_orphans(t)
             elif kind == "tick":
-                self.router.on_tick(t)
-                if self.pool is not None:
-                    self.pool.on_tick(t)
+                self._drive(self.plane.on_tick(t), t)
                 if self._n_terminal < total:
                     self._push(t + tick, "tick", None)
             if self._n_terminal == total:

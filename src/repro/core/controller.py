@@ -1,7 +1,7 @@
-"""Elastic control plane: heterogeneous pool autoscaling + admission.
+"""Elastic pool-scaling + admission policies for the control plane.
 
 The paper serves a *fixed* heterogeneous pool; operators don't.  This
-module adds the two controllers that close the loop over the
+module adds the policies that close the loop over the
 :class:`~repro.core.observability.ClusterView` snapshot API (they never
 touch ``Instance`` internals — enforced by tests/test_observability.py):
 
@@ -23,6 +23,13 @@ touch ``Instance`` internals — enforced by tests/test_observability.py):
   feasible requests need, and a shed cascades to the workflow's
   now-unmeetable descendants.
 
+All three are :class:`~repro.core.control_plane.Policy` objects hosted
+by a ControlPlane: they observe through ``plane.view(t)``, and they
+actuate ONLY by yielding :class:`~repro.core.control_plane.Decision`
+values (``Provision`` / ``Drain``) that the simulator executes — the
+actuation result (new instance id, drain acceptance) comes back through
+the ``yield``.
+
 Controllers are operator-side: they may read the hardware catalog
 (that's what the operator pays for) but only proxy-visible signals from
 the serving side.
@@ -32,34 +39,17 @@ from __future__ import annotations
 from typing import List, Optional, Sequence, Tuple
 
 from repro.cluster import hardware as hwlib
+from repro.core import control_plane as cplib
+from repro.core.control_plane import Beliefs, Drain, Provision
 
 
-class PoolController:
+class PoolController(cplib.Policy):
     """Base: a no-op controller (the static-pool mode)."""
     name = "static"
 
     def __init__(self):
-        self.sim = None
+        super().__init__()
         self.events: List[Tuple[float, str, str]] = []  # (t, action, detail)
-
-    def attach(self, sim):
-        self.sim = sim
-
-    # -- hooks the simulator drives ---------------------------------------
-
-    def on_arrival(self, t: float):
-        pass
-
-    def on_request_done(self, sr, t: float):
-        pass
-
-    def on_tick(self, t: float):
-        pass
-
-    def on_eviction(self, gid: int, t: float):
-        """A spot instance received its eviction notice (grace window
-        just opened)."""
-        pass
 
     def _log(self, t: float, action: str, detail: str):
         self.events.append((t, action, detail))
@@ -198,11 +188,11 @@ class ReactivePoolController(PoolController):
         if t - self._last_look < self.interval:
             return
         self._last_look = t
-        view = self.sim.cluster.view(t)
+        view = self.plane.view(t)
         up, down = self._signals(view, t)
-        self._decide(view, up, down, t)
+        yield from self._decide(view, up, down, t)
 
-    def on_eviction(self, gid: int, t: float):
+    def on_eviction_notice(self, gid: int, t: float):
         """Replace reclaimed spot capacity the moment the notice lands:
         provisioning inside the grace window means the replacement's
         warmup overlaps the victim's drain-down instead of following it.
@@ -211,7 +201,7 @@ class ReactivePoolController(PoolController):
         on-demand past it."""
         if not self.replace_evicted:
             return
-        view = self.sim.cluster.view(t)
+        view = self.plane.view(t)
         victim = view.view(gid)
         if not victim.is_spot:
             return
@@ -221,7 +211,7 @@ class ReactivePoolController(PoolController):
         if len(view.warming()) >= self.max_warming + 1:
             return   # replacement may exceed the stampede cap by one
         hw = self.pick_scale_up(view)
-        new_gid = self.sim.provision(hw, t, warmup_s=self.warmup_override)
+        new_gid = yield Provision(hw, warmup_s=self.warmup_override)
         self._owned.add(new_gid)
         self._log(t, "replace", f"{hw.name}#{new_gid} for evicted #{gid}")
 
@@ -231,7 +221,7 @@ class ReactivePoolController(PoolController):
         if (up > self.hi_load and n_pool < self.max_instances
                 and len(warming) < self.max_warming):
             hw = self.pick_scale_up(view)
-            gid = self.sim.provision(hw, t, warmup_s=self.warmup_override)
+            gid = yield Provision(hw, warmup_s=self.warmup_override)
             self._owned.add(gid)
             self._log(t, "provision", f"{hw.name}#{gid} load/inst={up:.1f}")
             self._lo_streak = 0
@@ -239,7 +229,7 @@ class ReactivePoolController(PoolController):
             self._lo_streak += 1
             if self._lo_streak >= self.cooldown:
                 gid = self.pick_scale_down(active)
-                if gid is not None and self.sim.drain(gid, t):
+                if gid is not None and (yield Drain(gid)):
                     self._log(t, "drain", f"#{gid} pending/inst={down:.1f}")
                 self._lo_streak = 0
         else:
@@ -279,7 +269,7 @@ class ForecastPoolController(ReactivePoolController):
             return self.warmup_override + self.interval
         return max(hw.warmup_s for hw in self._catalog()) + self.interval
 
-    def on_arrival(self, t: float):
+    def on_arrival(self, sr, t: float):
         self._arrivals += 1
 
     def on_tick(self, t: float):
@@ -300,9 +290,9 @@ class ForecastPoolController(ReactivePoolController):
                            + (1 - self.holt_beta) * self._trend)
         self._pred_rate = max(self._level + self._trend * self.horizon, 0.0)
 
-        view = self.sim.cluster.view(t)
+        view = self.plane.view(t)
         up, down = self._signals(view, t)
-        self._decide(view, up, down, t)
+        yield from self._decide(view, up, down, t)
 
     def _signals(self, view, t: float):
         up, down = super()._signals(view, t)
@@ -321,52 +311,45 @@ class ForecastPoolController(ReactivePoolController):
         return up, down * ratio
 
 
-class AdmissionController:
+class AdmissionController(cplib.Policy):
     """Early-shed admission: reject work that cannot make its deadline
     even on the fastest accepting instance (predicted critical path of
     this step + downstream steps > remaining slack x ``margin``).
     Admits unconditionally while estimates are cold.
 
-    With a ``rectifier`` (core/rectify.py OnlineSurvival) the shed
-    decision consumes *rectified* remaining work: the point prediction
-    is blended with the empirical survival curve built from completions
-    the simulator feeds back (``on_request_done``), so admission keeps
-    shedding honestly when the output-length distribution drifts away
-    from whatever the predictor was trained on."""
+    The length belief comes from a :class:`Beliefs` bundle — pass the
+    plane's shared instance (so admission and routing can't silently
+    diverge, and the rectifier drifts with reality through the plane's
+    exactly-once completion feedback), or the legacy
+    ``predictor``/``rectifier`` pieces for a private bundle."""
     name = "early_shed"
 
-    def __init__(self, predictor, margin: float = 1.0, min_obs: int = 3,
-                 rectifier=None):
-        self.predictor = predictor
+    def __init__(self, predictor=None, margin: float = 1.0, min_obs: int = 3,
+                 rectifier=None, beliefs: Beliefs = None):
+        super().__init__()
+        if beliefs is not None:
+            if predictor is not None or rectifier is not None:
+                raise TypeError("pass beliefs OR the individual "
+                                "predictor/rectifier pieces")
+            self.beliefs = beliefs
+        else:
+            self.beliefs = Beliefs(predictor=predictor, rectifier=rectifier)
         self.margin = margin
         self.min_obs = min_obs
-        self.rectifier = rectifier
-        self.sim = None
         self.shed_log: List[Tuple[float, int]] = []   # (t, rid)
 
-    def attach(self, sim):
-        self.sim = sim
+    @property
+    def predictor(self):
+        return self.beliefs.predictor
 
-    def _predict(self, sr) -> float:
-        from repro.core.router import predict_output
-        pred = predict_output(self.predictor, sr)
-        if self.rectifier is not None:
-            pred = self.rectifier.rectify(pred, sr.req.input_len,
-                                          sr.tokens_out)
-        return pred
-
-    def on_request_done(self, sr, t: float):
-        """Completion feedback the simulator drives at request finish:
-        the rectifier learns the true streamed length.  Idempotent per
-        request id, so sharing one OnlineSurvival with the router is
-        safe — each completion counts once no matter which hook fires
-        first."""
-        if self.rectifier is not None:
-            self.rectifier.observe(sr.req.input_len, sr.tokens_out,
-                                   rid=sr.req.rid)
+    @property
+    def rectifier(self):
+        return self.beliefs.rectifier
 
     def admit(self, sr, t: float) -> bool:
-        cv = self.sim.cluster.view(t)
+        """The gate the plane consults on every arrival (a query, not an
+        event hook: the plane turns the verdict into Shed/Route)."""
+        cv = self.plane.view(t)
         if cv.warming():
             # provisioned capacity is about to join: today's congested
             # estimates overstate the request's fate — don't shed work
@@ -375,10 +358,13 @@ class AdmissionController:
         views = [v for v in cv.accepting() if v.ema.n_obs >= self.min_obs]
         if not views:
             return True          # nothing trustworthy to judge against
-        pred = self._predict(sr)
+        pred = self.beliefs.predict(sr)
         down = max(sr.req.downstream, 0)
-        # most optimistic finish: ignore this arrival's queueing, take the
-        # fastest instance; downstream steps decode there too
+        # most optimistic finish: ignore this arrival's queueing, take
+        # the fastest instance; downstream steps decode there too.  At
+        # arrival nothing has streamed yet, so the rectified prediction
+        # IS the unconditional per-step estimate — one size fits the
+        # whole remaining chain.
         best = min(v.ema.p * sr.req.input_len
                    + v.ema.d * pred * (1 + down) for v in views)
         slack = sr.deadline - t

@@ -4,58 +4,59 @@ All routers see the same black-box cluster observables, and they see
 them ONLY through the :class:`~repro.core.observability.ClusterView`
 snapshot API — no router walks an Instance's internal queues or batch
 lists directly (enforced by tests/test_observability.py).
-GoodServe additionally consults its output-length predictor and the EMA
-estimates carried on the views, makes the *just-enough* selection
-(slowest feasible instance), and migrates SLO-at-risk requests at
+GoodServe additionally consults the plane's shared
+:class:`~repro.core.control_plane.Beliefs` (predictor + rectifier +
+eviction-rate posterior) and the EMA estimates carried on the views,
+makes the *just-enough* selection (slowest feasible instance), and
+yields rescue ``Migrate`` decisions for SLO-at-risk requests at
 runtime.  The Oracle router gets ground-truth lengths and the analytic
 hardware model — the upper bound of Fig. 2.
+
+Routers are :class:`~repro.core.control_plane.Policy` objects hosted by
+a ControlPlane: they actuate only through yielded Decision values; the
+simulator executes.
 """
 from __future__ import annotations
 
 import time
 from collections import deque
-from typing import List, Optional
+from typing import List
 
 import numpy as np
 
 from repro.cluster import hardware as hwlib
-from repro.cluster.simulator import SimRequest, Simulator
+from repro.cluster.simulator import SimRequest
+from repro.core import control_plane as cplib
 from repro.core import migration as miglib
 from repro.core import rectify as rectlib
+from repro.core.control_plane import Beliefs, Migrate, Route, predict_output
 from repro.core.observability import ClusterView, InstanceView
 
-
-def predict_output(predictor, sr: SimRequest) -> float:
-    """One output-length prediction for a (possibly mid-flight) request,
-    dispatching on the predictor's session-awareness.  Shared by routing
-    and admission control so the two can't silently diverge."""
-    if getattr(predictor, "session_aware", False):
-        out = predictor.predict([sr.req.prompt], [sr.req.input_len],
-                                [sr.tokens_out], sessions=[sr.req.session])
-    else:
-        out = predictor.predict([sr.req.prompt], [sr.req.input_len],
-                                [sr.tokens_out])
-    return float(out[0])
+__all__ = ["Router", "GoodServeRouter", "OracleRouter", "make_router",
+           "ALL_BASELINES", "predict_output"]
 
 
-class Router:
+class Router(cplib.Policy):
     name = "base"
 
     def __init__(self, seed: int = 0):
+        super().__init__()
         self.rng = np.random.default_rng(seed)
-        self.sim: Optional[Simulator] = None
         self.decision_times: List[float] = []
 
-    def attach(self, sim: Simulator):
-        self.sim = sim
+    @property
+    def sim(self):
+        """The simulator behind the plane (tests and examples poke it;
+        policy code itself must stay on the view API)."""
+        return self.plane.sim if self.plane is not None else None
 
     @property
     def cluster(self):
-        return self.sim.cluster
+        return self.plane.cluster
 
     def view(self, t: float) -> ClusterView:
         """Fresh proxy-visible snapshot of the whole pool."""
-        return self.sim.cluster.view(t)
+        return self.plane.view(t)
 
     def targets(self, t: float) -> List[InstanceView]:
         """Instances currently accepting admissions, in iid order.  When
@@ -88,25 +89,12 @@ class Router:
     def _route(self, sr: SimRequest, t: float) -> int:
         raise NotImplementedError
 
-    def on_risk_check(self, sr: SimRequest, t: float):
-        pass
-
-    def on_request_done(self, sr: SimRequest, t: float):
-        """Completion hook (e.g. to update per-session length beliefs)."""
-        pass
-
-    def on_tick(self, t: float):
-        pass
-
-    def on_instance_join(self, gid: int, t: float):
-        """A provisioned instance finished warming and is now routable."""
-        pass
-
     def on_failure(self, gid: int, victims, t: float):
-        """Token-ID resubmission of a dead instance's requests."""
+        """Token-ID resubmission of a dead instance's requests: one
+        ``Route`` per victim, executed as yielded — so each routing
+        decision sees the previous victim already enqueued."""
         for sr in victims:
-            new_gid = self.route(sr, t)
-            self.sim.enqueue(sr, new_gid, t)
+            yield Route(self.route(sr, t), sr=sr)
 
 
 # ---------------------------------------------------------------------------
@@ -198,11 +186,11 @@ class LlumnixRouter(Router):
         if hi.pending - lo.pending >= self.imbalance_threshold:
             sr = hi.newest_queued()
             if sr is not None:
-                self.sim.migrate(sr, lo.iid, t, mode="token_id")
+                yield Migrate(sr, lo.iid, "token_id")
                 return
             sr = hi.longest_running()
             if sr is not None:
-                self.sim.migrate(sr, lo.iid, t, mode="kv")
+                yield Migrate(sr, lo.iid, "kv")
 
 
 # ---------------------------------------------------------------------------
@@ -220,29 +208,49 @@ class GoodServeRouter(Router):
     migration likewise operate on workflow slack, not per-step slack."""
     name = "goodserve"
 
-    def __init__(self, predictor, seed: int = 0, enable_migration: bool = True,
+    def __init__(self, predictor=None, seed: int = 0,
+                 enable_migration: bool = True,
                  migration_mode: str = "token_id", margin: float = 0.7,
-                 spot_aware: bool = True, rectifier=None, evict_rates=None):
+                 spot_aware: bool = True, rectifier=None, evict_rates=None,
+                 beliefs: Beliefs = None):
         super().__init__(seed)
-        self.predictor = predictor
+        # estimation state lives in ONE Beliefs bundle — pass a shared
+        # instance (new style: the same object the plane and the
+        # admission path hold) or the legacy predictor/rectifier/
+        # evict_rates pieces and a private bundle is built:
+        #   * predictor — admission-time output-length model,
+        #   * rectifier (core/rectify.py OnlineSurvival) — turns stale
+        #     point predictions into conditional remaining-length
+        #     estimates as tokens stream; None reproduces the static
+        #     admission-time point estimate,
+        #   * evict_rates — rate provider for the spot surcharge.  The
+        #     catalog's rate field is the simulator's ground truth, not
+        #     an observable — by default a Gamma-Poisson posterior
+        #     learned from visible notices; rectlib.FixedEvictionRates
+        #     is the oracle-rate ablation.
+        if beliefs is not None:
+            if predictor is not None or rectifier is not None \
+                    or evict_rates is not None:
+                raise TypeError("pass beliefs OR the individual "
+                                "predictor/rectifier/evict_rates pieces")
+            # the shared bundle is the caller's: never mutate it.  A
+            # bundle without evict_rates simply prices no spot risk.
+            self.beliefs = beliefs
+        else:
+            if evict_rates is None and spot_aware:
+                # a spot-oblivious router never reads the estimate —
+                # installing a default estimator would only buy a
+                # per-tick snapshot + posterior update for nothing
+                evict_rates = rectlib.EvictionRateEstimator()
+            self.beliefs = Beliefs(predictor=predictor,
+                                   rectifier=rectifier,
+                                   evict_rates=evict_rates)
         self.enable_migration = enable_migration
         self.migration_mode = migration_mode
         # charge preemptible instances an eviction-risk surcharge in the
         # FEASIBILITY test (spot_aware=False is the spot-oblivious
         # ablation: identical policy, risk term zeroed)
         self.spot_aware = spot_aware
-        # runtime rectification (core/rectify.py): an OnlineSurvival model
-        # turns stale point predictions into conditional remaining-length
-        # estimates as tokens stream; None reproduces the static
-        # admission-time point estimate.
-        self.rectifier = rectifier
-        # eviction-rate provider for the spot surcharge.  The catalog's
-        # rate field is the simulator's ground truth, not an observable —
-        # by default the router learns a Gamma-Poisson posterior from the
-        # notices it can see; pass rectlib.FixedEvictionRates for the
-        # oracle-rate ablation.
-        self.evict_rates = (evict_rates if evict_rates is not None
-                            else rectlib.EvictionRateEstimator())
         self._rr_cold = 0   # instance state: cold-start round-robin cursor
         # feasibility margin: T <= margin * slack.  The EMA estimates lag a
         # growing batch and exclude this request's own interference, so
@@ -263,15 +271,25 @@ class GoodServeRouter(Router):
         self._completions: dict = {}
         self.completion_window_s = 45.0
 
+    # read-only views onto the shared bundle (legacy attribute names)
+    @property
+    def predictor(self):
+        return self.beliefs.predictor
+
+    @property
+    def rectifier(self):
+        return self.beliefs.rectifier
+
+    @property
+    def evict_rates(self):
+        return self.beliefs.evict_rates
+
     def _predict(self, sr: SimRequest) -> float:
-        pred = predict_output(self.predictor, sr)
-        if self.rectifier is not None:
-            # conditional rectification: a request that has streamed past
-            # its point prediction gets E[L | L > generated] off the
-            # empirical survival curve, not a "one more token" clamp
-            pred = self.rectifier.rectify(pred, sr.req.input_len,
-                                          sr.tokens_out)
-        return pred
+        # conditional rectification (Beliefs.predict): a request that
+        # has streamed past its point prediction gets E[L | L >
+        # generated] off the empirical survival curve, not a "one more
+        # token" clamp
+        return self.beliefs.predict(sr)
 
     @staticmethod
     def _downstream_steps(sr: SimRequest) -> int:
@@ -279,6 +297,15 @@ class GoodServeRouter(Router):
         one — DAG *structure* is client-declared and router-visible;
         step lengths are not (the predictor sizes them)."""
         return max(sr.req.downstream, 0)
+
+    def _downstream_unit(self, sr: SimRequest) -> float:
+        """Per-step decode size for the DOWNSTREAM slack budget: the
+        UNCONDITIONAL rectified estimate (Beliefs.step_estimate).  The
+        current step's conditional total inflates once its own
+        prediction is falsified — evidence about this step, not about
+        its children, so budgeting children with it overstates the
+        remaining critical path."""
+        return self.beliefs.step_estimate(sr)
 
     def _prune_recent(self, t: float):
         """Drop in-flight entries older than the window — ONCE per
@@ -350,7 +377,8 @@ class GoodServeRouter(Router):
         comes from ``self.evict_rates`` — by default the Gamma-Poisson
         posterior learned from observed notices, never the oracle field
         on the hardware spec (source-scan enforced)."""
-        if not self.spot_aware or not v.is_spot:
+        if not self.spot_aware or not v.is_spot \
+                or self.evict_rates is None:
             return 0.0
         rate = self.evict_rates.rate_per_hour(v.hw.name) / 3600.0
         if rate <= 0.0:
@@ -391,9 +419,11 @@ class GoodServeRouter(Router):
         slack = sr.deadline - t
         # remaining workflow work after this step: assume downstream steps
         # are predictor-sized decodes (their prefills mostly hit the
-        # session cache under affinity routing)
+        # session cache under affinity routing); each is sized by the
+        # UNCONDITIONAL rectified estimate, not this step's mid-flight
+        # belief
         down = self._downstream_steps(sr)
-        R = T + down * d * sr.pred_out
+        R = T + down * d * (self._downstream_unit(sr) if down else 0.0)
         unc = np.array([self._queue_uncertainty(v, t) for v in views])
         ctx = sr.req.input_len + sr.pred_out
         risk = np.array([self._eviction_risk(v, float(T[i]), ctx)
@@ -429,20 +459,11 @@ class GoodServeRouter(Router):
         self._recent_routes.append((t, chosen.iid, work))
         return chosen.iid
 
-    def on_tick(self, t: float):
-        # advance the eviction-rate posterior from the proxy-visible
-        # lifecycle snapshot (exposure accrues while spot instances are
-        # up; a notice is counted when an instance is first seen
-        # evicting).  FixedEvictionRates has no update hook, and a
-        # spot-oblivious router never reads the estimate — skip the
-        # per-tick snapshot in both cases.
-        if not self.spot_aware:
-            return
-        update = getattr(self.evict_rates, "update", None)
-        if update is not None:
-            update(self.view(t), t)
-
-    def on_risk_check(self, sr: SimRequest, t: float):
+    def on_step_done(self, sr: SimRequest, t: float):
+        """Periodic SLO-risk checkpoint (every tau decode iterations):
+        rectify the remaining-length belief and, when the current
+        instance can no longer make the (workflow) deadline, yield one
+        rescue ``Migrate`` to a stronger feasible target."""
         if (not self.enable_migration or sr.state != "running"
                 or sr.n_migrations >= self.max_migrations):
             return
@@ -454,10 +475,11 @@ class GoodServeRouter(Router):
         cv = self.view(t)
         self._prune_recent(t)
         down = self._downstream_steps(sr)
+        unit = self._downstream_unit(sr) if down else 0.0
         d_here = self._current_d(cv.view(gid), sr)
         # workflow slack: this step's remaining decode plus the estimated
         # downstream steps must all fit before the workflow deadline
-        finish_here = d_here * (remaining + down * total_pred)
+        finish_here = d_here * (remaining + down * unit)
         slack = sr.deadline - t
         if finish_here <= slack:
             return
@@ -467,7 +489,7 @@ class GoodServeRouter(Router):
         if not views:
             return
         T, d = self._latencies(sr, views, remaining, sr.context_len, t)
-        R = T + down * d * total_pred
+        R = T + down * d * unit
         # same eviction-risk surcharge as the admission path: a rescue
         # that parks a tight request on spot just trades one miss cause
         # for another
@@ -482,28 +504,18 @@ class GoodServeRouter(Router):
             # only move if materially better than staying (avoid ping-pong)
             if R[k] >= 0.8 * finish_here:
                 return
-        self.sim.migrate(sr, views[k].iid, t, mode=self.migration_mode)
+        yield Migrate(sr, views[k].iid, self.migration_mode)
 
     def on_request_done(self, sr: SimRequest, t: float):
+        # per-instance completion-rate window (the slot-wait signal).
+        # Survival-curve and online-predictor feedback is NOT fed here:
+        # the plane fans completions out to the shared Beliefs exactly
+        # once, no matter how many policies hold the bundle.
         if sr.instance is not None:
             dq = self._completions.setdefault(sr.instance, deque())
             dq.append(t)
             while dq and t - dq[0] > self.completion_window_s:
                 dq.popleft()     # bound growth while the queue stays empty
-        # completion feedback: the proxy streamed the whole response, so
-        # the true output length is router-visible at finish — feed the
-        # survival curves (idempotent per rid: an AdmissionController
-        # sharing this rectifier won't double-count) and any predictor
-        # that learns online (HistoryPredictor-style observe).
-        if self.rectifier is not None:
-            self.rectifier.observe(sr.req.input_len, sr.tokens_out,
-                                   rid=sr.req.rid)
-        if self.predictor is not None:
-            if hasattr(self.predictor, "observe"):
-                self.predictor.observe(sr.req.input_len, sr.tokens_out)
-            if (hasattr(self.predictor, "observe_step")
-                    and sr.req.session >= 0):
-                self.predictor.observe_step(sr.req.session, sr.tokens_out)
 
 
 class OracleRouter(GoodServeRouter):
@@ -525,6 +537,10 @@ class OracleRouter(GoodServeRouter):
                          evict_rates=evict_rates)
 
     def _predict(self, sr):
+        return float(sr.req.output_len)
+
+    def _downstream_unit(self, sr):
+        # ground truth sizes downstream steps too (nothing to rectify)
         return float(sr.req.output_len)
 
     def _latencies(self, sr, views, remaining_out, context_len, t):
@@ -559,7 +575,9 @@ def make_router(name: str, predictor=None, **kw) -> Router:
     if name in table:
         return table[name](**kw)
     if name == "goodserve":
-        assert predictor is not None
+        beliefs = kw.get("beliefs")
+        assert predictor is not None or (
+            beliefs is not None and beliefs.predictor is not None)
         return GoodServeRouter(predictor, **kw)
     if name == "oracle":
         return OracleRouter(**kw)

@@ -1,0 +1,240 @@
+"""ControlPlane facade: decision round-trip accounting, legacy-wiring
+equivalence (shim vs explicit plane, byte-identical trajectories for
+every router), once-only attach semantics, and exactly-once Beliefs
+feedback fan-out."""
+import pytest
+from conftest import ConstPredictor
+
+from repro.cluster import hardware as hwlib
+from repro.cluster.simulator import Cluster, Instance, Simulator
+from repro.cluster.workload import make_workflow_workload, make_workload
+from repro.core.control_plane import (Beliefs, ControlPlane, Decision,
+                                      Drain, Migrate, Park, Provision,
+                                      Route, Shed)
+from repro.core.controller import (AdmissionController,
+                                   ForecastPoolController)
+from repro.core.metrics import summarize_elastic
+from repro.core.rectify import EvictionRateEstimator, OnlineSurvival
+from repro.core.router import ALL_BASELINES, make_router
+
+FP = hwlib.footprint("llama3.1-8b")
+ROUTERS = [c.name for c in ALL_BASELINES] + ["goodserve", "oracle"]
+
+
+def _spot_a800():
+    return hwlib.spot_variant(hwlib.GPUS["A800"],
+                              evictions_per_hour=900.0, grace_s=1.5)
+
+
+def _pieces(router_name, seed=7):
+    """One full control-plane configuration (workflow DAG workload,
+    forecast autoscaling over a spot catalog, admission, shared
+    rectifier) as separate parts, for both wiring styles."""
+    reqs, wfs = make_workflow_workload(n_workflows=6, rps=2.0,
+                                       slo_scale=3.0, seed=seed)
+    cluster = Cluster([Instance(0, hwlib.GPUS["A800"], FP),
+                       Instance(1, _spot_a800(), FP)])
+    pred = ConstPredictor(180.0)
+    rect = OnlineSurvival()
+    kw = {}
+    if router_name == "goodserve":
+        kw = dict(predictor=pred, rectifier=rect,
+                  evict_rates=EvictionRateEstimator(
+                      prior_rate_per_hour=40.0))
+    router = make_router(router_name, **kw)
+    ctrl = ForecastPoolController(
+        scale_types=("A800",), spot_types=(_spot_a800(),),
+        max_instances=4, max_spot=2, min_active=2, interval=2.0,
+        hi_load=6.0, lo_pending=1.0, cooldown=2, warmup_override=2.0)
+    adm = AdmissionController(pred, margin=3.0, rectifier=rect)
+    return reqs, wfs, cluster, router, ctrl, adm
+
+
+def _fingerprint(sim, out, dur, cluster):
+    lines = []
+    for sr in out:
+        lines.append(repr((sr.req.rid, sr.state, sr.instance,
+                           sr.tokens_out, sr.n_migrations, sr.preempted,
+                           sr.finished_at, tuple(sr.journey))))
+    lines.append(repr(sim.migration_log))
+    lines.append(repr(sim.eviction_log))
+    lines.append(repr(sorted(summarize_elastic(out, dur, cluster).items())))
+    lines.append(repr([(g.iid, g.hw.name, g.state, g.started_at,
+                        g.retired_at) for g in cluster.instances]))
+    lines.append(repr(sim.plane.decision_log))
+    lines.append(repr(dur))
+    return "\n".join(lines)
+
+
+def _run(router_name, style):
+    reqs, wfs, cluster, router, ctrl, adm = _pieces(router_name)
+    if style == "legacy":
+        sim = Simulator(cluster, router, reqs, workflows=wfs, pool=ctrl,
+                        admission=adm, spot_seed=3)
+    else:
+        plane = ControlPlane(router=router, pool=ctrl, admission=adm)
+        sim = Simulator(cluster, plane, reqs, workflows=wfs, spot_seed=3)
+    out, dur = sim.run()
+    return _fingerprint(sim, out, dur, cluster), sim
+
+
+# ---- equivalence replay: shim wiring == explicit plane ---------------------
+
+@pytest.mark.parametrize("router_name", ROUTERS)
+def test_legacy_wiring_equals_explicit_plane(router_name):
+    a, _ = _run(router_name, "legacy")
+    b, _ = _run(router_name, "plane")
+    assert a == b, (f"{router_name}: legacy kwargs and explicit "
+                    f"ControlPlane wiring diverged")
+
+
+# ---- decision round-trip ---------------------------------------------------
+
+@pytest.mark.parametrize("router_name", ["goodserve", "llumnix", "random"])
+def test_every_emitted_decision_is_executed_exactly_once(router_name):
+    _, sim = _run(router_name, "plane")
+    plane = sim.plane
+    assert plane.decision_log, "the run must have produced decisions"
+    assert len(plane.decision_log) == len(plane.executed_log)
+    # 1:1 and in order — the simulator executed exactly what the plane
+    # emitted, nothing more, nothing dropped
+    for emitted, executed in zip(plane.decision_log, plane.executed_log):
+        assert emitted is executed
+    assert all(isinstance(d, Decision) for d in plane.decision_log)
+    kinds = {type(d) for d in plane.decision_log}
+    assert Route in kinds                      # every arrival routes
+    # the forecast controller over this trace actually scales
+    assert Provision in kinds or Drain in kinds
+
+
+def test_decision_log_covers_scaling_and_migration():
+    _, sim = _run("goodserve", "plane")
+    kinds = {type(d) for d in sim.plane.decision_log}
+    assert Provision in kinds, "forecast+spot config must provision"
+
+
+# ---- attach semantics ------------------------------------------------------
+
+def _tiny_cluster():
+    return Cluster([Instance(0, hwlib.GPUS["A800"], FP),
+                    Instance(1, hwlib.GPUS["A800"], FP)])
+
+
+def test_plane_reattach_raises():
+    plane = ControlPlane(router=make_router("round_robin"))
+    Simulator(_tiny_cluster(), plane, [])
+    with pytest.raises(RuntimeError):
+        Simulator(_tiny_cluster(), plane, [])
+
+
+def test_policy_reattach_raises():
+    router = make_router("round_robin")
+    Simulator(_tiny_cluster(), router, [])
+    with pytest.raises(RuntimeError):
+        Simulator(_tiny_cluster(), router, [])
+
+
+def test_mixed_plane_and_legacy_kwargs_raise():
+    plane = ControlPlane(router=make_router("round_robin"))
+    with pytest.raises(TypeError):
+        Simulator(_tiny_cluster(), make_router("random"), [], plane=plane)
+    with pytest.raises(TypeError):
+        Simulator(_tiny_cluster(), plane, [],
+                  admission=AdmissionController(ConstPredictor(10.0)))
+
+
+def test_simulator_has_no_policy_attributes():
+    """The facade contract: one ``plane`` reference, nothing else —
+    in BOTH construction styles (the shim maps and forgets)."""
+    sim = Simulator(_tiny_cluster(), make_router("round_robin"), [],
+                    admission=AdmissionController(ConstPredictor(10.0)))
+    for attr in ("router", "pool", "admission"):
+        assert not hasattr(sim, attr)
+    assert isinstance(sim.plane, ControlPlane)
+
+
+# ---- Beliefs: exactly-once feedback ----------------------------------------
+
+class _CountingRectifier(OnlineSurvival):
+    def __init__(self):
+        super().__init__()
+        self.calls = []
+
+    def observe(self, input_len, output_len, rid=None):
+        self.calls.append(rid)
+        super().observe(input_len, output_len, rid=rid)
+
+
+class _CountingPredictor(ConstPredictor):
+    def __init__(self, value=120.0):
+        super().__init__(value)
+        self.observed = []
+
+    def observe(self, input_len, output_len):
+        self.observed.append((input_len, output_len))
+
+
+def test_shared_beliefs_fed_exactly_once_per_completion():
+    """Router and admission share ONE Beliefs bundle: each completion
+    must reach the rectifier and the learning predictor exactly once —
+    the plane fans out, consumers never feed."""
+    pred = _CountingPredictor()
+    rect = _CountingRectifier()
+    beliefs = Beliefs(predictor=pred, rectifier=rect,
+                      evict_rates=EvictionRateEstimator())
+    plane = ControlPlane(
+        router=make_router("goodserve", beliefs=beliefs),
+        admission=AdmissionController(beliefs=beliefs, margin=3.0),
+        beliefs=beliefs)
+    reqs = make_workload(n=12, rps=20.0, slo_scale=5.0, seed=3)
+    sim = Simulator(_tiny_cluster(), plane, reqs)
+    out, _ = sim.run()
+    done = [sr for sr in out if sr.state == "done"]
+    assert done
+    assert len(rect.calls) == len(done)            # once per completion
+    assert len(set(rect.calls)) == len(rect.calls)  # no rid twice
+    assert len(pred.observed) == len(done)
+
+
+def test_legacy_shared_rectifier_still_counts_once():
+    """Legacy wiring (router and admission built with the same
+    rectifier object in separate bundles): identity dedupe keeps the
+    fan-out at one observe per completion."""
+    rect = _CountingRectifier()
+    pred = ConstPredictor(120.0)
+    router = make_router("goodserve", predictor=pred, rectifier=rect)
+    adm = AdmissionController(pred, margin=3.0, rectifier=rect)
+    reqs = make_workload(n=10, rps=20.0, slo_scale=5.0, seed=3)
+    sim = Simulator(_tiny_cluster(), router, reqs, admission=adm)
+    out, _ = sim.run()
+    done = [sr for sr in out if sr.state == "done"]
+    assert done and len(rect.calls) == len(done)
+
+
+def test_beliefs_or_pieces_not_both():
+    beliefs = Beliefs(predictor=ConstPredictor(10.0))
+    with pytest.raises(TypeError):
+        make_router("goodserve", predictor=ConstPredictor(10.0),
+                    beliefs=beliefs)
+    with pytest.raises(TypeError):
+        AdmissionController(ConstPredictor(10.0), beliefs=beliefs)
+
+
+# ---- arrival decisions -----------------------------------------------------
+
+def test_arrival_decisions_route_shed_park():
+    """A dead pool sheds ("lost"), a warming pool parks, a live pool
+    routes — all as explicit decisions in the log."""
+    spot = hwlib.spot_variant(hwlib.GPUS["A800"],
+                              evictions_per_hour=3600.0, grace_s=2.0)
+    cluster = Cluster([Instance(0, spot, FP), Instance(1, spot, FP)])
+    reqs = make_workload(n=40, rps=2.0, slo_scale=3.0, seed=1)
+    sim = Simulator(cluster, make_router("round_robin"), reqs,
+                    spot_seed=0)
+    out, _ = sim.run()                # the trace outlives the pool
+    kinds = {type(d) for d in sim.plane.decision_log}
+    assert Route in kinds
+    assert Shed in kinds
+    reasons = {d.reason for d in sim.plane.decision_log
+               if isinstance(d, Shed)}
+    assert "lost" in reasons

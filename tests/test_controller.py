@@ -97,13 +97,11 @@ def test_scale_up_filters_slo_infeasible_types():
     <50% of the pool's speed, even though it wins on bandwidth/$."""
     cluster = _small_cluster(("H800",))
     ctrl = ReactivePoolController(scale_types=("A800", "A40"))
-    ctrl.attach(Simulator(cluster, make_router("least_request"), []))
     hw = ctrl.pick_scale_up(cluster.view(0.0))
     assert hw.name == "A800"
     # an all-A40 operator pool keeps A40 eligible
     cluster2 = _small_cluster(("A40",))
     ctrl2 = ReactivePoolController(scale_types=("A800", "A40"))
-    ctrl2.attach(Simulator(cluster2, make_router("least_request"), []))
     assert ctrl2.pick_scale_up(cluster2.view(0.0)).name == "A40"
 
 

@@ -67,6 +67,9 @@ def _run(router_name: str, controller: str, seed: int = 7) -> str:
     lines.append(repr(sim.n_evictions))
     lines.append(repr(ctrl.events))
     lines.append(repr(adm.shed_log))
+    # every routing/scaling/migration decision the plane emitted, in
+    # order — the decision log IS the trajectory
+    lines.append(repr(sim.plane.decision_log))
     lines.append(repr(sorted(summarize_elastic(out, dur, cluster).items())))
     lines.append(repr(sorted(summarize_workflows(out, dur).items())))
     lines.append(repr([(g.iid, g.hw.name, g.state, g.started_at,
@@ -116,6 +119,7 @@ def _run_rectified(router_name: str, seed: int = 7) -> str:
     lines.append(repr(sim.migration_log))
     lines.append(repr(sim.eviction_log))
     lines.append(repr(adm.shed_log))
+    lines.append(repr(sim.plane.decision_log))
     lines.append(repr(sorted(summarize_elastic(out, dur, cluster).items())))
     # the learned state itself must replay: survival-curve feed count and
     # the eviction posterior's evidence

@@ -5,6 +5,7 @@ from repro.cluster import hardware as hwlib
 from repro.cluster.simulator import Cluster, Instance, Simulator
 from repro.cluster.workload import Request
 from repro.core import migration as miglib
+from repro.core.control_plane import Drain
 from repro.core.controller import PoolController
 from repro.core.router import make_router
 
@@ -63,7 +64,8 @@ def test_transfer_latencies_monotone_in_context():
 
 class _DrainAt(PoolController):
     """Test controller: drain one instance mid-run, migrating its
-    running requests with the given mode."""
+    running requests with the given mode (a Drain decision the
+    simulator executes; the acceptance comes back through the yield)."""
 
     def __init__(self, gid, at, mode):
         super().__init__()
@@ -72,8 +74,7 @@ class _DrainAt(PoolController):
 
     def on_tick(self, t):
         if not self.fired and t >= self.at:
-            self.fired = self.sim.drain(self.gid, t,
-                                        migrate_running=self.mode)
+            self.fired = bool((yield Drain(self.gid, mode=self.mode)))
 
 
 def _drain_run(mode: str):

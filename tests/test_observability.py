@@ -13,7 +13,8 @@ from repro.cluster import hardware as hwlib
 from repro.cluster.simulator import (Cluster, Instance, SimRequest,
                                      Simulator, build_paper_cluster)
 from repro.cluster.workload import Request, make_workload, sample_request
-from repro.core.controller import ReactivePoolController
+from repro.core.control_plane import Drain
+from repro.core.controller import PoolController, ReactivePoolController
 from repro.core.router import ALL_BASELINES, make_router
 
 _SRC = os.path.join(os.path.dirname(__file__), "..", "src", "repro")
@@ -22,6 +23,7 @@ _SRC = os.path.join(os.path.dirname(__file__), "..", "src", "repro")
 # ---- the black-box contract, enforced by construction ----------------------
 
 @pytest.mark.parametrize("module", ["core/router.py", "core/controller.py",
+                                    "core/control_plane.py",
                                     "core/migration.py", "core/rectify.py"])
 def test_no_instance_internals_in_proxy_code(module):
     """Routers, pool/admission controllers, the migration/evacuation
@@ -40,6 +42,24 @@ def test_no_instance_internals_in_proxy_code(module):
                     r"\._spot_rng\b", r"\.evictions_per_hour\b"):
         hits = [ln for ln in src.splitlines() if re.search(pattern, ln)]
         assert not hits, f"{module} touches Instance internals: {hits}"
+
+
+def test_simulator_is_facade_only():
+    """The simulator talks to ONE policy object — the ControlPlane —
+    and merely executes the Decisions it returns.  It must name no
+    concrete policy class and hold no router/pool/admission attribute
+    (the constructor shim maps legacy kwargs onto a plane and forgets
+    them), so new scenarios extend the plane, not the simulator."""
+    src = open(os.path.join(_SRC, "cluster", "simulator.py")).read()
+    for pattern in (r"self\.router\b", r"self\.pool\b",
+                    r"self\.admission\b",
+                    r"from repro\.core\.router", r"from repro\.core\.controller",
+                    r"\bmake_router\b", r"\bGoodServe",
+                    r"\bPoolController\b", r"\bAdmissionController\b",
+                    r"\bReactivePool", r"\bForecastPool"):
+        hits = [ln for ln in src.splitlines() if re.search(pattern, ln)]
+        assert not hits, \
+            f"simulator.py bypasses the ControlPlane facade: {hits}"
 
 
 def test_all_routers_still_route_via_views():
@@ -165,18 +185,14 @@ def test_failure_resubmission_falls_back_to_draining_capacity():
                     output_len=600, arrival=0.1 * i, slo=1e9)
             for i in range(6)]
     router = make_router("round_robin")
-    sim = Simulator(cluster, router, reqs, fail_at={0: 4.0})
 
-    class DrainThenWatch:
-        def attach(self, s): self.sim = s
-        def on_arrival(self, t): pass
-        def on_request_done(self, sr, t): pass
+    class DrainThenWatch(PoolController):
         def on_tick(self, t):
             if t >= 2.0 and cluster.instances[1].state == "active":
-                self.sim.drain(1, t)   # keeps running work: stays draining
+                yield Drain(1)     # keeps running work: stays draining
 
-    sim.pool = DrainThenWatch()
-    sim.pool.attach(sim)
+    sim = Simulator(cluster, router, reqs, fail_at={0: 4.0},
+                    pool=DrainThenWatch())
     out, _ = sim.run()
     assert not cluster.instances[0].alive
     assert all(sr.state == "done" for sr in out)
@@ -210,11 +226,10 @@ def test_controller_events_only_use_view_api(monkeypatch):
     must pick scale-down victims only among its own provisions."""
     cluster = _cluster(3)
     router = make_router("least_request")
-    sim = Simulator(cluster, router, [])
     ctrl = ReactivePoolController(min_active=1, cooldown=1, interval=0.0)
-    ctrl.attach(sim)
+    sim = Simulator(cluster, router, [], pool=ctrl)
     # low pressure but nothing owned -> no drain
-    ctrl.on_tick(10.0)
+    sim._drive(ctrl.on_tick(10.0), 10.0)
     assert all(g.state == "active" for g in cluster.instances)
     # after provisioning, the owned instance is the drain candidate
     view = cluster.view(0.0)

@@ -9,7 +9,8 @@ from repro.cluster import hardware as hwlib
 from repro.cluster.simulator import Cluster, Instance, Simulator
 from repro.cluster.workload import Request
 from repro.core import migration as miglib
-from repro.core.controller import ReactivePoolController
+from repro.core.control_plane import Drain
+from repro.core.controller import PoolController, ReactivePoolController
 from repro.core.router import make_router
 
 FP = hwlib.footprint("llama3.1-8b")
@@ -105,35 +106,23 @@ def test_running_and_queued_work_evacuates_and_completes():
     still finishes elsewhere; the preemption is attributed."""
     cluster = _cluster(spot_rate=0.0, grace=2.0)  # notice injected by hand
     reqs = _reqs(8)
-    sim = Simulator(cluster, make_router("round_robin"), reqs,
-                    preemptions=False)
 
-    class NoticeAt:
+    class NoticeAt(PoolController):
         def __init__(self, at):
+            super().__init__()
             self.at, self.fired = at, False
-
-        def attach(self, s):
-            self.sim = s
-
-        def on_arrival(self, t):
-            pass
-
-        def on_request_done(self, sr, t):
-            pass
-
-        def on_eviction(self, gid, t):
-            pass
 
         def on_tick(self, t):
             if not self.fired and t >= self.at:
                 self.fired = True
-                self.sim._evict_notice(1, t)
+                self.plane.sim._evict_notice(1, t)
 
-    sim.pool = NoticeAt(3.0)
-    sim.pool.attach(sim)
+    pool = NoticeAt(3.0)
+    sim = Simulator(cluster, make_router("round_robin"), reqs,
+                    preemptions=False, pool=pool)
     out, _ = sim.run()
     g = cluster.instances[1]
-    assert sim.pool.fired
+    assert pool.fired
     assert g.state == "evicted" and not g.queue and not g.running
     assert all(sr.state == "done" for sr in out)
     moved = [sr for sr in out if sr.preempted]
@@ -217,8 +206,8 @@ def test_kill_victims_wait_for_the_warming_replacement():
         def on_tick(self, t):
             if not self.fired and t >= self.at:
                 self.fired = True
-                self.sim._evict_notice(0, t)
-            super().on_tick(t)
+                self.plane.sim._evict_notice(0, t)
+            yield from super().on_tick(t)
 
     cluster = Cluster([Instance(0, _spot(rate=0.0, grace=2.0), FP)])
     ctrl = NoticeAt(2.0, scale_types=("A800",),
@@ -252,8 +241,8 @@ def test_orphans_are_lost_when_the_warming_rescuer_dies_pre_join():
         def on_tick(self, t):
             if not self.fired and t >= self.at:
                 self.fired = True
-                self.sim._evict_notice(0, t)
-            super().on_tick(t)
+                self.plane.sim._evict_notice(0, t)
+            yield from super().on_tick(t)
 
     cluster = Cluster([Instance(0, _spot(rate=0.0, grace=2.0), FP)])
     ctrl = NoticeAt(2.0, scale_types=("A800",),
@@ -276,36 +265,26 @@ def test_evacuation_reaches_a_draining_survivor():
     finishes what it holds), not riding out to the kill."""
     cluster = _cluster(spot_rate=0.0, grace=4.0)
     reqs = _reqs(8)
-    sim = Simulator(cluster, make_router("round_robin"), reqs,
-                    preemptions=False)
 
-    class DrainThenNotice:
+    class DrainThenNotice(PoolController):
         def __init__(self):
+            super().__init__()
             self.step = 0
-
-        def attach(self, s):
-            pass
-
-        def on_arrival(self, t):
-            pass
-
-        def on_request_done(self, sr, t):
-            pass
-
-        def on_eviction(self, gid, t):
-            pass
 
         def on_tick(self, t):
             if self.step == 0 and t >= 2.0:
                 self.step = 1
-                assert sim.drain(0, t)           # on-demand starts draining
+                # on-demand starts draining
+                assert (yield Drain(0))
             elif self.step == 1 and t >= 3.0:
                 self.step = 2
-                sim._evict_notice(1, t)          # spot notice right after
+                self.plane.sim._evict_notice(1, t)   # spot notice next
 
-    sim.pool = DrainThenNotice()
+    pool = DrainThenNotice()
+    sim = Simulator(cluster, make_router("round_robin"), reqs,
+                    preemptions=False, pool=pool)
     out, _ = sim.run()
-    assert sim.pool.step == 2
+    assert pool.step == 2
     evacuated = [sr for sr in out if sr.preempted
                  and any(ev == "evict" for _, ev, _ in sr.journey)]
     assert evacuated, "evacuation must fire with a draining survivor"
@@ -355,8 +334,7 @@ def test_scale_up_prefers_spot_until_cap_then_on_demand():
     cluster = Cluster([Instance(0, hwlib.GPUS["A800"], FP)])
     ctrl = ReactivePoolController(scale_types=("A800",),
                                   spot_types=("A800-spot",), max_spot=1)
-    ctrl.attach(Simulator(cluster, make_router("least_request"), [],
-                          preemptions=False))
+    # pick_scale_up judges a view; no plane needed
     view = cluster.view(0.0)
     assert ctrl.pick_scale_up(view).is_spot
     # once a spot instance is up (or warming), the cap redirects the
@@ -385,7 +363,7 @@ def test_controller_replaces_evicted_spot_inside_grace():
     cluster2 = _cluster(spot_rate=0.0)
     sim2 = Simulator(cluster2, make_router("least_request"), [],
                      pool=ctrl2, preemptions=False)
-    ctrl2.on_eviction(0, 1.0)                 # iid 0 is on-demand
+    sim2._drive(ctrl2.on_eviction_notice(0, 1.0), 1.0)  # iid 0: on-demand
     assert len(cluster2.instances) == 2 and not ctrl2.events
 
 

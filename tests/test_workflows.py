@@ -12,6 +12,7 @@ from repro.cluster.workload import (_CTX_CAP, Request, make_workflow,
 from repro.core.metrics import (summarize_workflows, workflow_goodput,
                                 workflow_outcomes, workflow_violation_ratio)
 from conftest import ConstPredictor
+from repro.core.control_plane import Migrate
 from repro.core.predictor import SessionAwarePredictor
 from repro.core.router import GoodServeRouter, make_router
 
@@ -230,12 +231,11 @@ def test_risk_check_uses_workflow_slack():
     req.deadline_t = 28.0
     sr = SimRequest(req=req, state="running", instance=1, tokens_out=10)
     cluster.instances[1].running.append(sr)
-    migrated = []
-    router.sim.migrate = lambda s, dst, t, mode: migrated.append(dst)
-    router.on_risk_check(sr, t=5.0)
+    decisions = list(router.on_step_done(sr, t=5.0))
     # own step: 0.05 * 90 = 4.5s < 23s slack, but the workflow needs
     # 0.05 * (90 + 4*100) = 24.5s > 23s -> must move to the fast GPU
-    assert migrated == [0]
+    assert [(d.dst, d.sr) for d in decisions
+            if isinstance(d, Migrate)] == [(0, sr)]
 
 
 # ---- session-aware predictor ------------------------------------------------
