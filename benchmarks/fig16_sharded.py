@@ -1,0 +1,215 @@
+"""Fig. 16: sharded control-plane replicas over bounded-staleness views.
+
+The paper's gateway is not one process: a deployment fronts the pool
+with several replicas, each routing against a snapshot of cluster
+state that is only periodically refreshed (Sec. 5's scalability
+argument).  This figure measures what that costs: N independent
+``ControlPlane`` replicas behind the session-affine partitioner of
+``repro.core.sharded_plane``, swept over replica count x view-sync
+interval against the single-plane (fresh-view) baseline on the paper
+testbed — same traffic, same pool, multi-seed with mean +/- 95% CI
+error bars from ``ResultList.aggregate``.
+
+Per cell the figure reports goodput, the realized staleness bound, the
+number of *conflicts* (a stale snapshot routed to a slot that was free
+in the view but taken live; the loser is rejected and retried through
+its own replica), and the per-event decision-latency percentiles the
+sharded plane records (the paper's Fig. 11 overhead budget, per event
+kind).
+
+Built-in assertions (the tentpole properties):
+
+  * N=4 at the tightest sync interval holds goodput within a few
+    percent of the single-plane baseline,
+  * loosening the sync interval degrades goodput monotonically-ish
+    (tolerance-based: staleness must never *help* beyond noise),
+  * conflicts appear, and do not decrease when views get staler,
+  * the event-loop fast path sustains a ~1M-event, 100-instance trace
+    in a single-digit-minutes run, with decision-latency percentiles
+    recorded for every event kind.
+"""
+from __future__ import annotations
+
+import time
+
+from benchmarks.common import emit, gpu as _gpu
+from benchmarks.fig13_autoscale import FamilyMeanPredictor
+from repro.bench import ExperimentSpec, run_experiment
+from repro.cluster import hardware as hwlib
+from repro.cluster.simulator import Cluster, Instance, Simulator
+from repro.cluster.workload import make_workload
+from repro.core.control_plane import Beliefs, ControlPlane
+from repro.core.router import make_router
+from repro.core.sharded_plane import make_sharded_plane
+
+REPLICAS = (2, 4)
+SYNCS = (0.25, 1.0, 4.0)          # view-sync interval sweep, seconds
+RPS = 3.0                         # the knee of the 32-slot testbed
+GOODPUT_TOL = 0.05                # N=4 @ tightest vs single-plane
+STALENESS_TOL = 0.05              # "monotonic-ish": staler never helps
+
+
+def _cluster() -> Cluster:
+    """The paper testbed with tight engine slots (max_num_seqs=8): the
+    regime where a stale free-slot belief is actually contended."""
+    fp = hwlib.footprint("llama3.1-8b")
+    hws = [_gpu(n, max_seqs=8) for n in ("H800", "A800", "A40", "V100")]
+    return Cluster([Instance(i, hw, fp) for i, hw in enumerate(hws)])
+
+
+def _replica(_idx: int) -> ControlPlane:
+    """One gateway replica: its OWN beliefs bundle (replicas do not
+    share learned state, exactly like separate processes would not)."""
+    beliefs = Beliefs(predictor=FamilyMeanPredictor())
+    return ControlPlane(router=make_router("goodserve", beliefs=beliefs),
+                        beliefs=beliefs)
+
+
+def _spec(name: str, n: int, seeds, plane_fn) -> ExperimentSpec:
+    return ExperimentSpec(
+        name=name,
+        pool=_cluster,
+        workload=lambda s: make_workload(n=n, rps=RPS, slo_scale=3.0,
+                                         seed=s),
+        plane=plane_fn,
+        seeds=seeds)
+
+
+def _cell(results) -> dict:
+    agg = results.aggregate(keys=("goodput_rps",))["goodput_rps"]
+    return dict(
+        goodput=agg["mean"], ci95=agg["ci95"], n_seeds=agg["n"],
+        conflicts=sum(len(getattr(r.plane, "conflict_log", ()))
+                      for r in results),
+        staleness=max((s.max_staleness for r in results
+                       for s in getattr(r.plane, "shards", ())),
+                      default=0.0))
+
+
+def measure_throughput(n_instances: int, n_requests: int, rps: float,
+                       n_replicas: int = 4, sync_interval_s: float = 1.0,
+                       seed: int = 1) -> dict:
+    """Drive one large trace through the sharded event loop and report
+    end-to-end events/s plus the per-kind decision-latency summary.
+    Cheap router (least-request) on a homogeneous pool: this measures
+    the event loop + view-sync + arbitration fast path, not predictor
+    arithmetic."""
+    fp = hwlib.footprint("llama3.1-8b")
+    hw = _gpu("A800", max_seqs=32)
+    cluster = Cluster([Instance(i, hw, fp) for i in range(n_instances)])
+    reqs = make_workload(n=n_requests, rps=rps, slo_scale=4.0, seed=seed)
+    plane = make_sharded_plane(
+        n_replicas, lambda i: ControlPlane(router=make_router(
+            "least_request")), sync_interval_s=sync_interval_s)
+    sim = Simulator(cluster, plane, reqs)
+    t0 = time.perf_counter()
+    out, dur = sim.run()
+    wall = time.perf_counter() - t0
+    lat = plane.latency.merge(plane.replica_latency()).summary()
+    return dict(events=sim.n_events, wall_s=wall,
+                events_per_s=sim.n_events / max(wall, 1e-9),
+                sim_duration=dur, conflicts=len(plane.conflict_log),
+                done=sum(1 for sr in out if sr.state == "done"),
+                n_requests=len(out), latency=lat)
+
+
+def throughput_line(fast: bool = True, seed: int = 1) -> dict:
+    """The ``--fast`` event-loop throughput line ``benchmarks/run.py``
+    prints: a small sharded trace, reported as events/s."""
+    n_inst, n_req, rps = (16, 2000, 60.0) if fast else (100, 70000, 400.0)
+    thr = measure_throughput(n_inst, n_req, rps, seed=seed)
+    emit(f"fig16_eventloop_{'fast' if fast else 'full'}",
+         thr["wall_s"] * 1e6,
+         f"{thr['events_per_s']:,.0f} events/s "
+         f"({thr['events']:,} events, {n_inst} instances, "
+         f"{thr['done']}/{thr['n_requests']} done, "
+         f"conflicts={thr['conflicts']})")
+    return thr
+
+
+def run(n: int = 1200, seed: int = 5, full_trace: bool = True):
+    seeds = (seed, seed + 1, seed + 2)
+
+    base = run_experiment(
+        _spec("fig16_single_plane", n, seeds, lambda c: _replica(0)))
+    cells = {None: _cell(base)}
+    b = cells[None]
+    emit("fig16_single_plane", 0.0,
+         f"goodput={b['goodput']:.3f}±{b['ci95']:.3f}rps "
+         f"seeds={b['n_seeds']}")
+
+    for n_rep in REPLICAS:
+        for sync in SYNCS:
+            spec = _spec(f"fig16_sharded_n{n_rep}_sync{sync:g}", n, seeds,
+                         lambda c, n_rep=n_rep, sync=sync:
+                         make_sharded_plane(n_rep, _replica,
+                                            sync_interval_s=sync))
+            res = run_experiment(spec)
+            cells[(n_rep, sync)] = c = _cell(res)
+            emit(spec.name, 0.0,
+                 f"goodput={c['goodput']:.3f}±{c['ci95']:.3f}rps "
+                 f"conflicts={c['conflicts']} "
+                 f"max_staleness={c['staleness']:.3f}s")
+            if (n_rep, sync) == (max(REPLICAS), min(SYNCS)):
+                lat = res[0].plane.latency.merge(
+                    res[0].plane.replica_latency()).summary()
+                for kind in ("arrival", "tick"):
+                    s = lat.get(kind)
+                    if s:
+                        emit(f"fig16_decision_latency_{kind}", 0.0,
+                             f"n={s['n']} p50={s['p50_us']:.1f}us "
+                             f"p95={s['p95_us']:.1f}us "
+                             f"p99={s['p99_us']:.1f}us")
+
+    # -- the tentpole properties --------------------------------------
+    base_gp = cells[None]["goodput"]
+    tight = cells[(max(REPLICAS), min(SYNCS))]
+    assert tight["goodput"] >= (1.0 - GOODPUT_TOL) * base_gp, (
+        f"N={max(REPLICAS)} at sync={min(SYNCS)}s goodput "
+        f"{tight['goodput']:.3f} rps fell more than "
+        f"{GOODPUT_TOL:.0%} below single-plane {base_gp:.3f} rps")
+    for n_rep in REPLICAS:
+        gp_tight = cells[(n_rep, min(SYNCS))]["goodput"]
+        gp_loose = cells[(n_rep, max(SYNCS))]["goodput"]
+        assert gp_loose <= gp_tight + STALENESS_TOL * base_gp, (
+            f"N={n_rep}: staler views must not HELP — "
+            f"sync={max(SYNCS)}s goodput {gp_loose:.3f} beats "
+            f"sync={min(SYNCS)}s {gp_tight:.3f} beyond tolerance")
+        # bounded staleness actually bounds: realized <= interval
+        assert cells[(n_rep, max(SYNCS))]["staleness"] \
+            <= max(SYNCS) + 1e-9
+    n_max = max(REPLICAS)
+    c_tight = cells[(n_max, min(SYNCS))]["conflicts"]
+    c_loose = cells[(n_max, max(SYNCS))]["conflicts"]
+    assert c_loose > 0, "no conflicts at the loosest sync — the sweep " \
+                        "is not exercising arbitration; raise the load"
+    assert c_loose >= c_tight, (
+        f"conflicts decreased with staleness ({c_tight} -> {c_loose}) "
+        f"at N={n_max} — arbitration accounting is suspect")
+    rel = tight["goodput"] / max(base_gp, 1e-9) - 1
+    emit("fig16_n4_tight_vs_single_plane", 0.0,
+         f"{rel * 100:+.2f}% ({base_gp:.3f} -> {tight['goodput']:.3f} "
+         f"rps; conflicts {c_tight} -> {c_loose} as sync "
+         f"{min(SYNCS)}s -> {max(SYNCS)}s)")
+
+    # -- event-loop throughput: the ~1M-event / 100-instance trace ----
+    thr = throughput_line(fast=not full_trace, seed=seed)
+    for kind in ("arrival", "step_done", "tick"):
+        s = thr["latency"].get(kind)
+        if s:
+            emit(f"fig16_eventloop_latency_{kind}", 0.0,
+                 f"n={s['n']} p50={s['p50_us']:.1f}us "
+                 f"p95={s['p95_us']:.1f}us p99={s['p99_us']:.1f}us "
+                 f"max={s['max_us']:.0f}us")
+    assert thr["done"] == thr["n_requests"], \
+        "throughput trace left requests unfinished"
+    assert set(thr["latency"]) >= {"arrival", "tick"}, \
+        "decision-latency telemetry missing event kinds"
+    if full_trace:
+        assert thr["events"] >= 1_000_000, (
+            f"full trace produced only {thr['events']:,} events — "
+            f"raise n_requests to keep the 1M-event claim honest")
+        assert thr["wall_s"] < 540.0, (
+            f"1M-event trace took {thr['wall_s']:.0f}s — the event "
+            f"loop fast path has regressed past single-digit minutes")
+    return cells

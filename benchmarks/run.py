@@ -35,7 +35,7 @@ def _suites(fast: bool) -> dict:
                             fig9_migration, fig10_sensitivity,
                             fig11_overhead, fig12_workflows,
                             fig13_autoscale, fig14_spot, fig15_rectify,
-                            roofline)
+                            fig16_sharded, roofline)
 
     n_sim = 200 if fast else 400
     epochs = 12 if fast else 40
@@ -70,6 +70,12 @@ def _suites(fast: bool) -> dict:
         # (a fraction of the span, not an absolute time)
         "fig15": _Suite(fig15_rectify.run, kw=dict(n=2200),
                         fast_kw=dict(n=1000), seedable=True),
+        # fast mode halves the sweep trace and swaps the ~1M-event /
+        # 100-instance throughput run for a small one (the sweep's
+        # multi-seed CIs and conflict assertions are kept either way)
+        "fig16": _Suite(fig16_sharded.run, kw=dict(n=1200),
+                        fast_kw=dict(n=600, full_trace=False),
+                        seedable=True),
         "roofline": _Suite(roofline.run),
     }
 
@@ -88,6 +94,7 @@ def main() -> None:
     suites = _suites(args.fast)
     only = [s for s in args.only.split(",") if s]
     failed = []
+    ran = []
     for name, suite in suites.items():
         if only and name not in only:
             continue
@@ -104,6 +111,17 @@ def main() -> None:
             failed.append(name)
             traceback.print_exc()
         print(f"# {name} done in {time.time() - t0:.1f}s", flush=True)
+        ran.append(name)
+    if args.fast and "fig16" not in ran:
+        # the event-loop throughput line: cheap enough to always report
+        # in fast mode, even when the fig16 sweep itself was filtered out
+        from benchmarks.fig16_sharded import throughput_line
+        print("# --- event-loop throughput ---", flush=True)
+        try:
+            throughput_line(fast=True)
+        except Exception:
+            failed.append("eventloop")
+            traceback.print_exc()
     if failed:
         print(f"# FAILED suites: {failed}")
         sys.exit(1)

@@ -1,5 +1,7 @@
 """Declarative experiment harness over the ControlPlane API."""
 from repro.bench.harness import (ExperimentResult, ExperimentSpec,
+                                 ResultList, aggregate_results,
                                  run_experiment)
 
-__all__ = ["ExperimentSpec", "ExperimentResult", "run_experiment"]
+__all__ = ["ExperimentSpec", "ExperimentResult", "ResultList",
+           "aggregate_results", "run_experiment"]

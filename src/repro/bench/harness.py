@@ -37,6 +37,7 @@ factory returns ``(requests, workflows)``.
 from __future__ import annotations
 
 import dataclasses
+import math
 import time
 from typing import Any, Callable, Dict, List, Mapping, Optional, Sequence
 
@@ -104,9 +105,44 @@ def _summarize(out, dur, cluster, reqs, span, workflows):
     return s
 
 
-def run_experiment(spec: ExperimentSpec) -> List[ExperimentResult]:
+def aggregate_results(results: Sequence[ExperimentResult],
+                      keys: Sequence[str] = ("goodput_rps",
+                                             "goodput_per_usd")) -> dict:
+    """Cross-seed aggregation: per summary key, the sample mean and a
+    normal-approximation 95% confidence half-width
+    (``1.96 * s / sqrt(n)`` with the ddof=1 sample standard deviation;
+    0.0 when only one seed ran — a single run has no spread to report,
+    which is exactly why multi-seed specs exist).  Learned-vs-heuristic
+    comparisons are only meaningful with error bars (Lodestar)."""
+    out = {}
+    for key in keys:
+        vals = [float(r.summary[key]) for r in results]
+        n = len(vals)
+        if n == 0:
+            raise ValueError(f"no results to aggregate for {key!r}")
+        mean = sum(vals) / n
+        if n > 1:
+            var = sum((v - mean) ** 2 for v in vals) / (n - 1)
+            ci95 = 1.96 * math.sqrt(var / n)
+        else:
+            ci95 = 0.0
+        out[key] = {"mean": mean, "ci95": ci95, "n": n}
+    return out
+
+
+class ResultList(list):
+    """``run_experiment``'s return value: a list of per-seed
+    ExperimentResults (so every existing ``run_experiment(spec)[0]``
+    caller keeps working) that also knows how to aggregate itself."""
+
+    def aggregate(self, keys: Sequence[str] = ("goodput_rps",
+                                               "goodput_per_usd")) -> dict:
+        return aggregate_results(self, keys)
+
+
+def run_experiment(spec: ExperimentSpec) -> "ResultList":
     """Build, run, and summarize one spec — once per seed."""
-    results = []
+    results = ResultList()
     for seed in spec.seeds:
         wl = spec.workload(seed)
         reqs, wfs = wl if isinstance(wl, tuple) else (wl, None)

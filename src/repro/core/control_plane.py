@@ -51,7 +51,10 @@ two bundles still learns each completion once.
 from __future__ import annotations
 
 import dataclasses
-from typing import Iterator, List, Optional, Sequence
+import time
+from typing import Dict, Iterator, List, Optional, Sequence
+
+from repro.core.metrics import LatencyLog
 
 
 # ---------------------------------------------------------------------------
@@ -343,6 +346,12 @@ class ControlPlane:
         self.decision_log: List[Decision] = []
         self.executed_log: List[Decision] = []
         self._belief_set: List[Beliefs] = []
+        # wall-clock decision-latency telemetry (metrics.LatencyLog):
+        # plane compute only, never part of a replay fingerprint
+        self.latency = LatencyLog()
+        # hook fast path, filled at attach: per hook name, the policies
+        # that actually override it
+        self._hooked: Dict[str, list] = {}
 
     # -- wiring --------------------------------------------------------------
 
@@ -367,6 +376,16 @@ class ControlPlane:
         for b in bundles:
             if b is not None and all(b is not x for x in self._belief_set):
                 self._belief_set.append(b)
+        # precompute which policies override each broadcast hook: the
+        # event loop is hot (every completion/tick fans out to every
+        # policy), and calling a no-op default just to discover it
+        # returned None is pure generator churn.  Skipping non-overriders
+        # is byte-identical — the defaults neither decide nor observe.
+        self._hooked = {
+            h: [p for p in self._policies()
+                if getattr(type(p), h, None) is not getattr(Policy, h)]
+            for h in ("on_arrival", "on_request_done", "on_tick",
+                      "on_instance_join", "on_eviction_notice")}
 
     @property
     def cluster(self):
@@ -379,10 +398,12 @@ class ControlPlane:
 
     # -- decision plumbing ---------------------------------------------------
 
-    def _relay(self, gen) -> Iterator[Decision]:
+    def _relay(self, gen, kind: str = "stream") -> Iterator[Decision]:
         """Normalize a policy hook's result (None, iterable, or
         generator) into a logged decision stream, forwarding actuation
-        results back into generators."""
+        results back into generators.  Each ``send`` segment — the
+        policy compute between actuations, not the actuation itself —
+        is timed into the plane's decision-latency log under ``kind``."""
         if gen is None:
             return
         if not hasattr(gen, "send"):          # plain iterable
@@ -391,11 +412,16 @@ class ControlPlane:
                 yield d
             return
         result = None
+        clock = time.perf_counter
+        record = self.latency.record
         while True:
+            t0 = clock()
             try:
                 d = gen.send(result)
             except StopIteration:
+                record(kind, clock() - t0)
                 return
+            record(kind, clock() - t0)
             self.decision_log.append(d)
             result = yield d
 
@@ -432,7 +458,13 @@ class ControlPlane:
     def on_arrival(self, sr, t: float) -> Decision:
         """Admission + routing for one arrival; returns exactly one
         decision."""
-        for p in self._policies():
+        t0 = time.perf_counter()
+        d = self._arrival_decision(sr, t)
+        self.latency.record("arrival", time.perf_counter() - t0)
+        return d
+
+    def _arrival_decision(self, sr, t: float) -> Decision:
+        for p in self._hooked["on_arrival"]:
             note = p.on_arrival(sr, t)
             if hasattr(note, "send"):
                 # run a generator body so its bookkeeping happens, but
@@ -457,13 +489,15 @@ class ControlPlane:
         return self.disposition(sr, t)
 
     def on_step_done(self, sr, t: float) -> Iterator[Decision]:
-        yield from self._relay(self.router.on_step_done(sr, t))
+        yield from self._relay(self.router.on_step_done(sr, t),
+                               kind="step_done")
 
     def on_request_done(self, sr, t: float) -> Iterator[Decision]:
         """Completion: policy hooks first, then belief feedback exactly
         once per component (rectifier curves, online predictors)."""
-        for p in self._policies():
-            yield from self._relay(p.on_request_done(sr, t))
+        for p in self._hooked["on_request_done"]:
+            yield from self._relay(p.on_request_done(sr, t),
+                                   kind="request_done")
         seen: set = set()
         for b in self._belief_set:
             b.observe_completion(sr, seen=seen)
@@ -480,17 +514,19 @@ class ControlPlane:
             seen: set = set()
             for b in self._belief_set:
                 b.observe_view(cv, t, seen=seen)
-        for p in self._policies():
-            yield from self._relay(p.on_tick(t))
+        for p in self._hooked["on_tick"]:
+            yield from self._relay(p.on_tick(t), kind="tick")
 
     def on_instance_join(self, gid: int, t: float) -> Iterator[Decision]:
-        for p in self._policies():
-            yield from self._relay(p.on_instance_join(gid, t))
+        for p in self._hooked["on_instance_join"]:
+            yield from self._relay(p.on_instance_join(gid, t), kind="join")
 
     def on_eviction_notice(self, gid: int, t: float) -> Iterator[Decision]:
-        for p in self._policies():
-            yield from self._relay(p.on_eviction_notice(gid, t))
+        for p in self._hooked["on_eviction_notice"]:
+            yield from self._relay(p.on_eviction_notice(gid, t),
+                                   kind="evict_notice")
 
     def on_failure(self, gid: int, victims: Sequence,
                    t: float) -> Iterator[Decision]:
-        yield from self._relay(self.router.on_failure(gid, victims, t))
+        yield from self._relay(self.router.on_failure(gid, victims, t),
+                               kind="failure")

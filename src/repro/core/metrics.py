@@ -7,8 +7,10 @@ every instance from provision to retirement (warmup included), so
 goodput-per-dollar is what an operator actually pays for."""
 from __future__ import annotations
 
+import math
+from array import array
 from collections import defaultdict
-from typing import Dict, Sequence, Tuple
+from typing import Dict, Mapping, Sequence, Tuple
 
 
 def goodput(finished, total_duration: float) -> float:
@@ -172,6 +174,77 @@ def summarize_elastic(finished, duration: float, cluster) -> dict:
         "pred_mae_tokens": prediction_mae_tokens(finished),
     })
     return s
+
+
+# ---------------------------------------------------------------------------
+# Decision latency (control-plane overhead, paper Fig. 11 budget)
+# ---------------------------------------------------------------------------
+
+class LatencyLog:
+    """Wall-clock decision latency of the control plane, per event
+    kind ("arrival", "tick", ...).  This measures only the plane's own
+    compute — the time a hook spends producing its next decision, not
+    the simulated actuation — so it is directly comparable to the
+    paper's Fig. 11 per-request routing-overhead budget.
+
+    Samples are wall-clock and therefore nondeterministic by nature;
+    they live OUTSIDE every replay fingerprint (decision logs and
+    metric summaries never include them).  Storage is ``array('d')``
+    so million-event traces cost 8 bytes per sample, not a boxed
+    float."""
+
+    def __init__(self):
+        self.samples: Dict[str, array] = {}
+
+    def record(self, kind: str, seconds: float):
+        a = self.samples.get(kind)
+        if a is None:
+            a = self.samples[kind] = array("d")
+        a.append(seconds)
+
+    def merge(self, other: "LatencyLog") -> "LatencyLog":
+        """Fold another log into this one (e.g. per-replica logs of a
+        sharded plane into a gateway-wide distribution)."""
+        for kind, a in other.samples.items():
+            mine = self.samples.get(kind)
+            if mine is None:
+                mine = self.samples[kind] = array("d")
+            mine.extend(a)
+        return self
+
+    def n(self) -> int:
+        return sum(len(a) for a in self.samples.values())
+
+    def summary(self) -> dict:
+        return summarize_decision_latency(self.samples)
+
+
+def _percentile(sorted_vals: Sequence[float], q: float) -> float:
+    """Nearest-rank percentile of an ascending-sorted sequence."""
+    if not sorted_vals:
+        return 0.0
+    rank = math.ceil(q / 100.0 * len(sorted_vals))
+    return sorted_vals[min(max(rank, 1), len(sorted_vals)) - 1]
+
+
+def summarize_decision_latency(samples_by_kind: Mapping[str, Sequence[float]]
+                               ) -> dict:
+    """Per-event-kind latency distribution in microseconds:
+    ``kind -> {n, mean_us, p50_us, p95_us, p99_us, max_us}``."""
+    out = {}
+    for kind, vals in sorted(samples_by_kind.items()):
+        s = sorted(vals)
+        if not s:
+            continue
+        out[kind] = {
+            "n": len(s),
+            "mean_us": sum(s) / len(s) * 1e6,
+            "p50_us": _percentile(s, 50.0) * 1e6,
+            "p95_us": _percentile(s, 95.0) * 1e6,
+            "p99_us": _percentile(s, 99.0) * 1e6,
+            "max_us": s[-1] * 1e6,
+        }
+    return out
 
 
 def summarize(finished, total_duration: float) -> dict:

@@ -22,12 +22,27 @@ proxy issues; they expose hit *lengths*, not cache contents.
 for migration decisions (the proxy owns the requests it routed), so
 load balancers like Llumnix can pick migration victims without walking
 engine internals.
+
+Views are VERSIONED: every capture stamps a monotone ``version`` drawn
+from the cluster's snapshot counter plus the capture time ``t``, so a
+gateway replica holding a bounded-staleness snapshot (the sharded
+control plane of core/sharded_plane.py) can prove it never steps
+backwards.  ``freeze()`` materializes the lazy per-instance load
+signals at capture time — a snapshot held *across* simulated time must
+not leak later cluster state through its cached properties (the cache
+probes stay live: they model a prefix-table RPC answered by the
+instance, not replicated gateway state).  ``as_arrays()`` exposes the
+snapshot as flat numpy arrays for consumers that make many decisions
+against one frozen view.
 """
 from __future__ import annotations
 
 import dataclasses
 from functools import cached_property
-from typing import List, Sequence
+from types import SimpleNamespace
+from typing import List, Optional, Sequence
+
+import numpy as np
 
 from repro.cluster import hardware as hwlib
 from repro.core.estimator import InstanceEstimate
@@ -123,29 +138,101 @@ class InstanceView:
             return None
         return max(self._inst.running, key=lambda r: r.context_len)
 
+    def freeze(self) -> "InstanceView":
+        """Materialize every lazy load signal at capture time.
+
+        A per-decision view never needs this (the instance can't change
+        under it), but a bounded-staleness snapshot held by a gateway
+        replica does: without freezing, the cached properties would read
+        the live instance at *access* time and leak fresher state than
+        the snapshot's version claims.  Cache probes and migration
+        handles intentionally stay live — they model RPCs the replica
+        issues at decision time, not replicated view state."""
+        _ = (self.tpm, self.mem_used_frac, self.queued_ages,
+             self.queued_prefill_tokens, self.running_context_lens)
+        return self
+
+
+# The lazy vectors a freeze() must have materialized (and exactly the
+# set InstanceView defines as cached properties — pinned by test).
+FROZEN_SIGNALS = ("tpm", "mem_used_frac", "queued_ages",
+                  "queued_prefill_tokens", "running_context_lens")
+
+
+def capture_instance(cluster, g, t: float) -> InstanceView:
+    """Snapshot ONE live instance (the per-instance half of
+    ClusterView.capture, shared with the sharded plane's conflict
+    check, which needs a fresh view of a single routing target without
+    paying for a full-cluster capture)."""
+    return InstanceView(
+        iid=g.iid, state=g.state, alive=g.alive,
+        accepting=g.accepting,
+        n_queued=len(g.queue), n_running=len(g.running),
+        t=t, ema=cluster.estimator.snapshot(g.iid),
+        hw=g.hw, fp=g.fp,
+        eviction_deadline=g.eviction_deadline, _inst=g)
+
 
 class ClusterView:
-    """Snapshot of every instance, in iid order."""
+    """Snapshot of every instance, in iid order.
 
-    def __init__(self, views: Sequence[InstanceView]):
+    ``version`` is a cluster-wide monotone capture counter and ``t``
+    the capture timestamp: two views of the same cluster always order
+    by version, and a consumer comparing ``view.t`` against its own
+    clock gets its observation staleness."""
+
+    def __init__(self, views: Sequence[InstanceView],
+                 version: int = 0, t: float = 0.0):
         self.instances: List[InstanceView] = list(views)
+        self.version = version
+        self.t = t
         self._by_iid = {v.iid: v for v in self.instances}
 
     @classmethod
     def capture(cls, cluster, t: float) -> "ClusterView":
-        views = []
-        for g in cluster.instances:
-            views.append(InstanceView(
-                iid=g.iid, state=g.state, alive=g.alive,
-                accepting=g.accepting,
-                n_queued=len(g.queue), n_running=len(g.running),
-                t=t, ema=cluster.estimator.snapshot(g.iid),
-                hw=g.hw, fp=g.fp,
-                eviction_deadline=g.eviction_deadline, _inst=g))
-        return cls(views)
+        views = [capture_instance(cluster, g, t)
+                 for g in cluster.instances]
+        bump = getattr(cluster, "next_view_version", None)
+        return cls(views, version=bump() if bump is not None else 0, t=t)
+
+    def freeze(self) -> "ClusterView":
+        """Pin every instance's lazy signals at capture time (see
+        InstanceView.freeze) so the snapshot can be held across
+        simulated time by a gateway replica."""
+        for v in self.instances:
+            v.freeze()
+        return self
 
     def view(self, iid: int) -> InstanceView:
         return self._by_iid[iid]
+
+    def get(self, iid: int) -> Optional[InstanceView]:
+        """Like view(), but None for instances that joined after this
+        snapshot was captured (a stale replica may hear about a request
+        bound for an instance it hasn't synced yet)."""
+        return self._by_iid.get(iid)
+
+    def as_arrays(self):
+        """Flat array projection of the snapshot (iid, pending,
+        accepting, alive, max_seqs), computed once and cached — the
+        fast path for consumers that score many candidates against one
+        frozen view without touching per-InstanceView attributes."""
+        arr = getattr(self, "_arrays", None)
+        if arr is None:
+            vs = self.instances
+            arr = SimpleNamespace(
+                iid=np.fromiter((v.iid for v in vs), dtype=np.int64,
+                                count=len(vs)),
+                pending=np.fromiter((v.pending for v in vs),
+                                    dtype=np.int64, count=len(vs)),
+                accepting=np.fromiter((v.accepting for v in vs),
+                                      dtype=bool, count=len(vs)),
+                alive=np.fromiter((v.alive for v in vs), dtype=bool,
+                                  count=len(vs)),
+                max_seqs=np.fromiter((v.hw.max_seqs for v in vs),
+                                     dtype=np.int64, count=len(vs)))
+            self._arrays = arr
+        return arr
 
     def accepting(self) -> List[InstanceView]:
         """Instances that may receive new admissions (routing targets)."""

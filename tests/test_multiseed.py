@@ -1,0 +1,145 @@
+"""Multi-seed experiment aggregation (mean ± 95% CI) and the
+decision-latency summary math, pinned on hand-computed fixtures —
+error bars and overhead percentiles are only trustworthy if the
+arithmetic behind them is."""
+import math
+from types import SimpleNamespace
+
+import pytest
+
+from repro.bench import (ExperimentSpec, ResultList, aggregate_results,
+                         run_experiment)
+from repro.cluster import hardware as hwlib
+from repro.cluster.simulator import Cluster, Instance
+from repro.cluster.workload import make_workload
+from repro.core.metrics import LatencyLog, summarize_decision_latency
+from repro.core.router import make_router
+
+FP = hwlib.footprint("llama3.1-8b")
+
+
+def _fake(**summary):
+    return SimpleNamespace(summary=summary)
+
+
+# ---- aggregation math, hand-computed ---------------------------------------
+
+def test_mean_and_ci_over_three_seeds():
+    results = [_fake(goodput_rps=1.0), _fake(goodput_rps=2.0),
+               _fake(goodput_rps=3.0)]
+    agg = aggregate_results(results, keys=("goodput_rps",))
+    a = agg["goodput_rps"]
+    assert a["n"] == 3
+    assert a["mean"] == pytest.approx(2.0)
+    # sample variance (ddof=1) of [1,2,3] is 1.0, so the 95% half-width
+    # is 1.96 * sqrt(1/3)
+    assert a["ci95"] == pytest.approx(1.96 / math.sqrt(3.0))
+    assert a["ci95"] == pytest.approx(1.1316, abs=1e-4)
+
+
+def test_two_seed_ci():
+    results = [_fake(gp=10.0), _fake(gp=14.0)]
+    a = aggregate_results(results, keys=("gp",))["gp"]
+    # mean 12, sample sd sqrt(((10-12)^2 + (14-12)^2)/1) = sqrt(8)
+    assert a["mean"] == pytest.approx(12.0)
+    assert a["ci95"] == pytest.approx(1.96 * math.sqrt(8.0 / 2.0))
+
+
+def test_single_seed_has_no_spread_to_report():
+    a = aggregate_results([_fake(gp=7.5)], keys=("gp",))["gp"]
+    assert a == {"mean": 7.5, "ci95": 0.0, "n": 1}
+
+
+def test_identical_seeds_give_zero_ci():
+    results = [_fake(gp=5.0)] * 4
+    a = aggregate_results(results, keys=("gp",))["gp"]
+    assert a["mean"] == pytest.approx(5.0)
+    assert a["ci95"] == 0.0
+
+
+def test_empty_results_raise():
+    with pytest.raises(ValueError):
+        aggregate_results([], keys=("gp",))
+
+
+def test_multiple_keys_aggregate_independently():
+    results = [_fake(a=1.0, b=10.0), _fake(a=3.0, b=10.0)]
+    agg = aggregate_results(results, keys=("a", "b"))
+    assert agg["a"]["mean"] == pytest.approx(2.0)
+    assert agg["b"]["mean"] == pytest.approx(10.0)
+    assert agg["b"]["ci95"] == 0.0
+
+
+# ---- run_experiment integration --------------------------------------------
+
+def _spec(seeds):
+    return ExperimentSpec(
+        name="multiseed_smoke",
+        pool=lambda: Cluster([Instance(i, hwlib.GPUS["A800"], FP)
+                              for i in range(2)]),
+        workload=lambda seed: make_workload(n=40, rps=10.0, slo_scale=3.0,
+                                            seed=seed),
+        plane=lambda cluster: make_router("least_request"),
+        seeds=seeds)
+
+
+def test_run_experiment_runs_each_seed_and_aggregates():
+    results = run_experiment(_spec(seeds=(1, 2, 3)))
+    assert isinstance(results, ResultList)
+    assert [r.seed for r in results] == [1, 2, 3]
+    agg = results.aggregate(keys=("goodput_rps",))
+    a = agg["goodput_rps"]
+    assert a["n"] == 3
+    vals = [r.summary["goodput_rps"] for r in results]
+    assert a["mean"] == pytest.approx(sum(vals) / 3.0)
+    # different workload seeds must actually produce different runs —
+    # otherwise the CI is an artifact of replaying one trace
+    assert len(set(vals)) > 1
+    # existing single-result callers keep working
+    assert results[0].summary["goodput_rps"] == vals[0]
+
+
+def test_same_seed_replays_collapse_the_ci():
+    results = run_experiment(_spec(seeds=(5, 5)))
+    a = results.aggregate(keys=("goodput_rps",))["goodput_rps"]
+    assert a["ci95"] == 0.0
+
+
+# ---- decision-latency summary math, hand-computed --------------------------
+
+def test_latency_percentiles_nearest_rank():
+    us = 1e-6
+    samples = {"arrival": [10 * us, 20 * us, 30 * us, 40 * us]}
+    s = summarize_decision_latency(samples)["arrival"]
+    assert s["n"] == 4
+    assert s["mean_us"] == pytest.approx(25.0)
+    # nearest-rank: p50 -> ceil(0.50*4)=2nd, p95/p99 -> ceil(3.8)=4th
+    assert s["p50_us"] == pytest.approx(20.0)
+    assert s["p95_us"] == pytest.approx(40.0)
+    assert s["p99_us"] == pytest.approx(40.0)
+    assert s["max_us"] == pytest.approx(40.0)
+
+
+def test_latency_summary_is_order_invariant():
+    us = 1e-6
+    a = summarize_decision_latency({"k": [3 * us, 1 * us, 2 * us]})
+    b = summarize_decision_latency({"k": [1 * us, 2 * us, 3 * us]})
+    assert a == b
+    assert a["k"]["p50_us"] == pytest.approx(2.0)
+
+
+def test_latency_log_record_and_merge():
+    log = LatencyLog()
+    for v in (1e-6, 2e-6):
+        log.record("arrival", v)
+    log.record("tick", 5e-6)
+    other = LatencyLog()
+    other.record("arrival", 3e-6)
+    log.merge(other)
+    assert log.n() == 4
+    s = log.summary()
+    assert s["arrival"]["n"] == 3
+    assert s["arrival"]["max_us"] == pytest.approx(3.0)
+    assert s["tick"]["n"] == 1
+    # empty kinds never appear
+    assert set(s) == {"arrival", "tick"}

@@ -24,6 +24,7 @@ _SRC = os.path.join(os.path.dirname(__file__), "..", "src", "repro")
 
 @pytest.mark.parametrize("module", ["core/router.py", "core/controller.py",
                                     "core/control_plane.py",
+                                    "core/sharded_plane.py",
                                     "core/migration.py", "core/rectify.py"])
 def test_no_instance_internals_in_proxy_code(module):
     """Routers, pool/admission controllers, the migration/evacuation

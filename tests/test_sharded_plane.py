@@ -1,0 +1,353 @@
+"""ShardedControlPlane: N gateway replicas over bounded-staleness
+views.  Covers the three contracts the sharding refactor must keep:
+
+* **Equivalence** — one replica at zero staleness is the unsharded
+  ControlPlane, byte for byte, for every router (the sharded plane is
+  then a pure demultiplexer over the live cluster);
+* **Conflict arbitration** — two replicas racing for the same last
+  free slot: the loser's Route is rejected exactly once, retried
+  through its own plane, and both outcomes appear in the decision
+  logs with emitted==executed still 1:1 at both levels;
+* **View-sync staleness bounds** (property-tested via tests/_hyp) —
+  snapshot versions are monotone per replica, a replica never observes
+  a snapshot older than its last sync, and observed staleness never
+  exceeds ``sync_interval_s``.
+"""
+import dataclasses
+
+import pytest
+from _hyp import given, settings, st
+from conftest import ConstPredictor
+
+from repro.cluster import hardware as hwlib
+from repro.cluster.simulator import Cluster, Instance, Simulator
+from repro.cluster.workload import (Request, make_workflow_workload,
+                                    make_workload)
+from repro.core.control_plane import ControlPlane, Route
+from repro.core.controller import (AdmissionController,
+                                   ForecastPoolController)
+from repro.core.metrics import summarize_elastic
+from repro.core.rectify import EvictionRateEstimator, OnlineSurvival
+from repro.core.router import ALL_BASELINES, make_router
+from repro.core.sharded_plane import (ShardedControlPlane,
+                                      default_partition,
+                                      make_sharded_plane)
+
+FP = hwlib.footprint("llama3.1-8b")
+ROUTERS = [c.name for c in ALL_BASELINES] + ["goodserve", "oracle"]
+
+
+def _spot_a800():
+    return hwlib.spot_variant(hwlib.GPUS["A800"],
+                              evictions_per_hour=900.0, grace_s=1.5)
+
+
+def _full_plane(router_name):
+    """One fully-loaded replica: router + forecast autoscaler over a
+    spot catalog + admission + shared rectifier — the same
+    configuration tests/test_control_plane.py replays."""
+    pred = ConstPredictor(180.0)
+    rect = OnlineSurvival()
+    kw = {}
+    if router_name == "goodserve":
+        kw = dict(predictor=pred, rectifier=rect,
+                  evict_rates=EvictionRateEstimator(
+                      prior_rate_per_hour=40.0))
+    router = make_router(router_name, **kw)
+    ctrl = ForecastPoolController(
+        scale_types=("A800",), spot_types=(_spot_a800(),),
+        max_instances=4, max_spot=2, min_active=2, interval=2.0,
+        hi_load=6.0, lo_pending=1.0, cooldown=2, warmup_override=2.0)
+    adm = AdmissionController(pred, margin=3.0, rectifier=rect)
+    return ControlPlane(router=router, pool=ctrl, admission=adm)
+
+
+def _fingerprint(sim, out, dur, cluster):
+    lines = []
+    for sr in out:
+        lines.append(repr((sr.req.rid, sr.state, sr.instance,
+                           sr.tokens_out, sr.n_migrations, sr.preempted,
+                           sr.finished_at, tuple(sr.journey))))
+    lines.append(repr(sim.migration_log))
+    lines.append(repr(sim.eviction_log))
+    lines.append(repr(sim.plane.decision_log))
+    lines.append(repr(sorted(summarize_elastic(out, dur, cluster).items())))
+    lines.append(repr([(g.iid, g.hw.name, g.state, g.started_at,
+                        g.retired_at) for g in cluster.instances]))
+    lines.append(repr(dur))
+    return "\n".join(lines)
+
+
+def _run(router_name, style, seed=7):
+    reqs, wfs = make_workflow_workload(n_workflows=6, rps=2.0,
+                                       slo_scale=3.0, seed=seed)
+    cluster = Cluster([Instance(0, hwlib.GPUS["A800"], FP),
+                       Instance(1, _spot_a800(), FP)])
+    if style == "unsharded":
+        plane = _full_plane(router_name)
+    else:
+        plane = ShardedControlPlane([_full_plane(router_name)],
+                                    sync_interval_s=0.0)
+    sim = Simulator(cluster, plane, reqs, workflows=wfs, spot_seed=3)
+    out, dur = sim.run()
+    return _fingerprint(sim, out, dur, cluster), sim
+
+
+# ---- equivalence: N=1, staleness=0 == unsharded, for every router ----------
+
+@pytest.mark.parametrize("router_name", ROUTERS)
+def test_single_replica_zero_staleness_equals_unsharded(router_name):
+    a, _ = _run(router_name, "unsharded")
+    b, sim = _run(router_name, "sharded")
+    assert a == b, (f"{router_name}: N=1/staleness=0 sharded plane "
+                    f"diverged from the unsharded ControlPlane")
+    assert sim.plane.conflict_log == []   # live views can never conflict
+    # and the demultiplexed decision stream matches the replica's own
+    replica = sim.plane.shards[0].replica
+    assert repr(sim.plane.decision_log) == repr(replica.decision_log)
+
+
+# ---- conflict injection ----------------------------------------------------
+
+def _one_slot_pool():
+    hw = dataclasses.replace(hwlib.GPUS["A800"], max_seqs=1)
+    return Cluster([Instance(0, hw, FP), Instance(1, hw, FP)])
+
+
+def _race(sync_interval_s):
+    """Two replicas, two near-simultaneous arrivals, one free slot per
+    instance: both snapshots show instance 0 least-loaded, so replica 1
+    races replica 0 for the same slot."""
+    reqs = [Request(rid=i, family="code", prompt="p", input_len=400,
+                    output_len=200, arrival=0.01 * i, slo=1e9)
+            for i in range(2)]
+    plane = make_sharded_plane(
+        2, lambda i: ControlPlane(router=make_router("least_request")),
+        sync_interval_s=sync_interval_s)
+    sim = Simulator(_one_slot_pool(), plane, reqs)
+    out, _ = sim.run()
+    return plane, out
+
+
+def test_conflict_loser_rejected_exactly_once_and_retried():
+    plane, out = _race(sync_interval_s=100.0)
+    # exactly one conflict: replica 1 lost instance 0 to replica 0
+    assert plane.conflict_log == [(0.01, 1, 0, 1)]
+    # BOTH outcomes are in the global decision log, in causal order:
+    # the winner's route, the rejected route, the retry
+    assert [repr(d) for d in plane.decision_log] == [
+        "Route(gid=0, rid=0)", "Route(gid=0, rid=1)",
+        "Route(gid=1, rid=1)"]
+    # emitted == executed, 1:1 and same objects, at the sharded level...
+    assert len(plane.decision_log) == len(plane.executed_log)
+    for emitted, executed in zip(plane.decision_log, plane.executed_log):
+        assert emitted is executed
+    # ...and per replica: the loser's log shows reject-then-retry
+    loser = plane.shards[1].replica
+    assert [repr(d) for d in loser.decision_log] == [
+        "Route(gid=0, rid=1)", "Route(gid=1, rid=1)"]
+    assert len(loser.decision_log) == len(loser.executed_log)
+    winner = plane.shards[0].replica
+    assert [repr(d) for d in winner.decision_log] == ["Route(gid=0, rid=0)"]
+    # the retry re-entered the LOSER's plane, not the winner's
+    assert all(sr.state == "done" for sr in out)
+    assert [sr.instance for sr in out] == [0, 1]
+
+
+def test_zero_staleness_cannot_conflict():
+    plane, out = _race(sync_interval_s=0.0)
+    assert plane.conflict_log == []
+    assert all(sr.state == "done" for sr in out)
+    # live views route the second arrival around the filled slot
+    assert [sr.instance for sr in out] == [0, 1]
+
+
+def test_stale_route_to_dead_instance_is_rejected_and_rerouted():
+    """Liveness half of arbitration: a snapshot that still shows a
+    failed instance as routable must not strand work on it."""
+    reqs = [Request(rid=i, family="code", prompt="p", input_len=400,
+                    output_len=300, arrival=float(i), slo=1e9)
+            for i in range(4)]
+    plane = make_sharded_plane(
+        2, lambda i: ControlPlane(router=make_router("round_robin")),
+        sync_interval_s=1000.0)      # snapshots never refresh on their own
+    cluster = Cluster([Instance(0, hwlib.GPUS["A800"], FP),
+                       Instance(1, hwlib.GPUS["A800"], FP)])
+    sim = Simulator(cluster, plane, reqs, fail_at={0: 0.5})
+    out, _ = sim.run()
+    assert all(sr.state == "done" for sr in out)
+    # every post-failure admission landed on the survivor
+    for sr in out:
+        for (tt, ev, gid) in sr.journey:
+            if ev == "enq" and tt > 0.5:
+                assert gid == 1
+    # at least one stale Route(0) was arbitrated away
+    assert any(gid == 0 for (_, _, gid, _) in plane.conflict_log)
+
+
+# ---- emitted == executed under churn ---------------------------------------
+
+def test_accounting_one_to_one_under_evictions_and_scaling():
+    reqs, wfs = make_workflow_workload(n_workflows=6, rps=2.0,
+                                       slo_scale=3.0, seed=7)
+    cluster = Cluster([Instance(0, hwlib.GPUS["A800"], FP),
+                       Instance(1, _spot_a800(), FP)])
+    plane = ShardedControlPlane([_full_plane("goodserve")
+                                 for _ in range(2)], sync_interval_s=0.5)
+    sim = Simulator(cluster, plane, reqs, workflows=wfs, spot_seed=3)
+    out, _ = sim.run()
+    assert sim.n_evictions > 0            # the scenario actually churns
+    assert plane.decision_log
+    assert len(plane.decision_log) == len(plane.executed_log)
+    for emitted, executed in zip(plane.decision_log, plane.executed_log):
+        assert emitted is executed
+    for s in plane.shards:
+        assert len(s.replica.decision_log) == len(s.replica.executed_log)
+    # the global log is an interleaving of the replica logs: same
+    # multiset, nothing invented and nothing dropped
+    merged = sorted(map(id, plane.decision_log))
+    per_replica = sorted(i for s in plane.shards
+                         for i in map(id, s.replica.decision_log))
+    assert merged == per_replica
+
+
+# ---- view-sync staleness properties (tests/_hyp) ---------------------------
+
+def _sharded_run(n, interval, seed):
+    reqs = make_workload(n=60, rps=12.0, slo_scale=3.0, seed=seed)
+    cluster = Cluster([Instance(i, hwlib.GPUS["A800"], FP)
+                       for i in range(3)])
+    plane = make_sharded_plane(
+        n, lambda i: ControlPlane(router=make_router("least_request")),
+        sync_interval_s=interval)
+    sim = Simulator(cluster, plane, reqs)
+    sim.run()
+    return plane
+
+
+@settings(max_examples=8, deadline=None)
+@given(n=st.integers(min_value=1, max_value=4),
+       interval=st.sampled_from([0.25, 0.5, 1.0, 2.0]),
+       seed=st.integers(min_value=0, max_value=50))
+def test_view_sync_monotone_and_staleness_bounded(n, interval, seed):
+    plane = _sharded_run(n, interval, seed)
+    for s in plane.shards:
+        assert s.sync_log, "every replica must have synced at least once"
+        times = [t for t, _ in s.sync_log]
+        versions = [v for _, v in s.sync_log]
+        # versions strictly increase per replica (monotone view stream)
+        assert versions == sorted(versions)
+        assert len(set(versions)) == len(versions)
+        assert times == sorted(times)
+        # the held snapshot IS the last sync — never anything older
+        assert s.snapshot.version == s.sync_log[-1][1]
+        assert s.last_sync == s.sync_log[-1][0]
+        # bounded staleness: no decision observed a view older than the
+        # sync interval (syncs happen before any event is demultiplexed)
+        assert s.max_staleness <= interval + 1e-9
+
+
+def test_replicas_share_one_capture_per_sync_point():
+    """Batched view sync: replicas due at the same event timestamp are
+    refreshed from ONE capture (same version), not N."""
+    plane = _sharded_run(n=3, interval=0.5, seed=1)
+    by_time = {}
+    for s in plane.shards:
+        for t, v in s.sync_log:
+            by_time.setdefault(t, set()).add(v)
+    shared = [t for t, vs in by_time.items() if len(vs) == 1]
+    # every sync point where several replicas were due used one version
+    assert all(len(vs) == 1 for vs in by_time.values()), by_time
+    assert shared
+
+
+# ---- partitioner -----------------------------------------------------------
+
+def test_partitioner_is_deterministic_and_session_affine():
+    class _R:
+        def __init__(self, wid, rid):
+            self.wid, self.rid = wid, rid
+
+    class _SR:
+        def __init__(self, wid, rid):
+            self.req = _R(wid, rid)
+
+    # workflow steps follow their workflow id, whatever their rid
+    for wid in range(8):
+        owners = {default_partition(_SR(wid, rid), 4)
+                  for rid in range(20)}
+        assert owners == {wid % 4}
+    # standalone requests fall back to rid
+    assert default_partition(_SR(-1, 7), 4) == 3
+    assert default_partition(_SR(-1, 8), 4) == 0
+
+
+def test_arrivals_actually_spread_across_replicas():
+    plane = _sharded_run(n=4, interval=0.5, seed=2)
+    loads = [len(s.replica.decision_log) for s in plane.shards]
+    assert all(n > 0 for n in loads), loads
+
+
+# ---- attach / telemetry ----------------------------------------------------
+
+def test_sharded_reattach_raises():
+    plane = make_sharded_plane(
+        2, lambda i: ControlPlane(router=make_router("round_robin")),
+        sync_interval_s=0.5)
+    cluster = Cluster([Instance(0, hwlib.GPUS["A800"], FP),
+                       Instance(1, hwlib.GPUS["A800"], FP)])
+    Simulator(cluster, plane, [])
+    with pytest.raises(RuntimeError):
+        Simulator(Cluster([Instance(0, hwlib.GPUS["A800"], FP)]),
+                  plane, [])
+
+
+def test_decision_latency_recorded_per_event_kind():
+    plane = _sharded_run(n=2, interval=0.5, seed=3)
+    summary = plane.latency.summary()
+    assert "arrival" in summary
+    a = summary["arrival"]
+    assert a["n"] == 60                      # one sample per arrival
+    assert 0.0 < a["p50_us"] <= a["p95_us"] <= a["p99_us"] <= a["max_us"]
+    # per-replica logs fold into one gateway-wide distribution
+    merged = plane.replica_latency()
+    assert merged.n() == sum(s.replica.latency.n() for s in plane.shards)
+    assert "arrival" in merged.summary()
+
+
+# ---- frozen snapshots ------------------------------------------------------
+
+def test_frozen_snapshot_does_not_leak_later_state():
+    """A replica's snapshot must keep reporting capture-time load even
+    after the live instance moves on (the lazy InstanceView signals
+    read live state unless frozen)."""
+    cluster = Cluster([Instance(0, hwlib.GPUS["A800"], FP)])
+    g = cluster.instances[0]
+    frozen = cluster.view(1.0).freeze()
+    live_before = frozen.view(0).tpm
+    g.note_tokens(5000.0, 1.0)       # the engine streams on
+    assert frozen.view(0).tpm == live_before
+    fresh = cluster.view(2.0)
+    assert fresh.view(0).tpm > live_before
+    # versions advanced monotonically across the captures
+    assert fresh.version > frozen.version
+
+
+def test_cluster_view_versions_are_monotone():
+    cluster = Cluster([Instance(0, hwlib.GPUS["A800"], FP)])
+    vs = [cluster.view(float(i)).version for i in range(5)]
+    assert vs == sorted(vs) and len(set(vs)) == 5
+
+
+def test_as_arrays_matches_per_view_scalars():
+    cluster = Cluster([Instance(i, hwlib.GPUS["A800"], FP)
+                       for i in range(3)])
+    cluster.instances[1].state = "draining"
+    cv = cluster.view(0.0)
+    arr = cv.as_arrays()
+    assert list(arr.iid) == [0, 1, 2]
+    assert list(arr.accepting) == [True, False, True]
+    assert list(arr.alive) == [True, True, True]
+    assert list(arr.pending) == [v.pending for v in cv.instances]
+    assert list(arr.max_seqs) == [v.hw.max_seqs for v in cv.instances]
+    assert cv.as_arrays() is arr             # computed once, cached
