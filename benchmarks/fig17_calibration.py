@@ -1,0 +1,170 @@
+"""Fig. 17: profile calibration on a drifted-capability testbed, plus the
+paged-attention tiling microbench (the kernel-level half of the same
+calibration story).
+
+Deployed hardware rarely matches its catalog entry: power caps, noisy
+neighbors, driver regressions and plain silicon lottery move real
+iteration latency away from the roofline constants.  This figure drifts
+the testbed's true per-instance capability away from the catalog (H800
+badly degraded, A40 better than book, V100 mildly degraded) and compares
+three ways of bootstrapping GoodServe's beliefs over the SAME drifted
+truth:
+
+* ``constant`` — no priors: the estimator cold-starts from hardcoded
+  defaults and the router burns a round-robin exploration phase
+  (min_obs) on every instance before it can rank them;
+* ``catalog``  — priors seeded from the *undrifted* catalog profiles
+  (``Cluster(prior_profiles=...)``): confidently wrong beliefs that
+  route tight-SLO work onto the degraded H800 until the EMA claws the
+  estimate back;
+* ``profile``  — priors seeded from measured (here: drifted-analytic
+  stand-in) profiles via ``Cluster(profiles=..., seed_priors=True)``:
+  correct beliefs from the first request.
+
+All three pools carry the drifted profiles as the SIMULATION TRUTH
+(``Instance.profile`` drives ``decode_iteration_time``/``prefill_time``)
+— the configurations differ only in what the router believes, never in
+what the hardware does.
+
+The pool is ELASTIC (reactive controller scaling drifted H800/V100
+under a diurnal trace), which is where calibration earns its keep:
+every provisioned instance is a fresh cold start, and the GoodServe
+router round-robins ALL traffic onto unexplored instances until each
+has ``min_obs`` observations — so without priors, each swell-triggered
+provision stalls the whole pool's routing on a degraded newcomer.
+Profile priors arrive with ``n_obs`` pre-credited and skip that tax on
+every provision, not just at t=0.  The assertion is the calibration
+claim: profile-seeded goodput >= cold-start goodput on the drifted
+testbed.
+
+The second half reports the paged-attention kernel before/after tiling
+(``pages_per_tile`` 1 vs 4) via ``bench.profile.paged_kernel_microbench``
+and asserts the >=1.2x grid-step reduction (the wall-clock proxy off-TPU,
+where interpret-mode timings are not meaningful) with outputs matching
+the JAX reference.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+from benchmarks.common import emit, gpu as _gpu
+from benchmarks.fig13_autoscale import FamilyMeanPredictor
+from repro.bench import ExperimentSpec, run_experiment
+from repro.bench.profile import analytic_profile, paged_kernel_microbench
+from repro.cluster import hardware as hwlib
+from repro.cluster.simulator import Cluster, Instance
+from repro.cluster.workload import make_workload
+from repro.core.control_plane import ControlPlane
+from repro.core.controller import ReactivePoolController
+from repro.core.router import make_router
+
+MODEL = "llama3.1-8b"
+NAMES = ("H800", "A800", "A40", "V100")
+BASE = ("A800", "A40")          # reserved pool; the rest is elastic
+MODES = ("constant", "catalog", "profile")
+
+# what deployment measured vs what the catalog claims: H800 power-capped
+# behind a congested host (the paper's heterogeneity made worse), A40
+# tuned past its book constants, V100 on a degraded NVLink pair
+DRIFT = {
+    "H800": dict(mfu=0.18, mbu=0.28, overhead_ms=9.0),
+    "A800": {},
+    "A40": dict(mfu=0.52, mbu=0.80),
+    "V100": dict(mbu=0.52),
+}
+
+
+def drifted(name: str) -> hwlib.HardwareSpec:
+    return dataclasses.replace(hwlib.GPUS[name], **DRIFT[name])
+
+
+def truth_profiles(fp):
+    """The drifted testbed's measured truth.  Analytic profiles over the
+    drifted constants stand in for TPU-measured artifacts (same schema,
+    same consumption path); provenance stays honest about that."""
+    return {n: analytic_profile(
+        drifted(n), fp,
+        meta={"role": "fig17 drifted-truth stand-in", "drift": str(DRIFT[n])})
+        for n in NAMES}
+
+
+def _pool(mode: str) -> Cluster:
+    fp = hwlib.footprint(MODEL)
+    kw = dict(profiles=truth_profiles(fp))
+    if mode == "constant":
+        kw["seed_priors"] = False
+    elif mode == "catalog":
+        # confidently wrong: beliefs from the UNDRIFTED catalog entries
+        # (also on every elastically provisioned instance)
+        kw["prior_profiles"] = {
+            n: analytic_profile(hwlib.GPUS[n], fp) for n in NAMES}
+    return Cluster([Instance(i, _gpu(n), fp) for i, n in enumerate(BASE)],
+                   **kw)
+
+
+def _plane(cluster):
+    pool = ReactivePoolController(
+        scale_types=(_gpu("H800"), _gpu("V100")), max_instances=6,
+        min_active=2, interval=4.0, hi_load=12.0, lo_pending=2.5,
+        cooldown=1, warmup_override=20.0)
+    return ControlPlane(
+        router=make_router("goodserve", predictor=FamilyMeanPredictor()),
+        pool=pool)
+
+
+def run(n: int = 900, rps: float = 10.0, slo_scale=(1.4, 2.6),
+        seed: int = 4, n_seeds: int = 3, fast: bool = False):
+    results = {}
+    for mode in MODES:
+        spec = ExperimentSpec(
+            name=f"fig17_{mode}",
+            pool=lambda mode=mode: _pool(mode),
+            workload=lambda s: make_workload(
+                n=n, rps=rps, slo_scale=slo_scale, seed=s,
+                arrival="diurnal",
+                arrival_kw=dict(period=150.0, amplitude=0.85)),
+            plane=_plane,
+            seeds=tuple(seed + i for i in range(n_seeds)))
+        res = run_experiment(spec)
+        agg = res.aggregate(keys=("goodput_rps", "violation_ratio"))
+        results[mode] = agg
+        emit(spec.name, res[0].us,
+             f"goodput={agg['goodput_rps']['mean']:.3f}rps"
+             f"(+-{agg['goodput_rps']['ci95']:.3f}) "
+             f"viol={agg['violation_ratio']['mean']:.3f} "
+             f"seeds={n_seeds}")
+    gp = {m: results[m]["goodput_rps"]["mean"] for m in MODES}
+    emit("fig17_profile_vs_constant", 0.0,
+         f"{(gp['profile'] / max(gp['constant'], 1e-9) - 1) * 100:+.1f}%")
+    emit("fig17_profile_vs_catalog", 0.0,
+         f"{(gp['profile'] / max(gp['catalog'], 1e-9) - 1) * 100:+.1f}%")
+    # the calibration claim: correct priors never lose to cold-start
+    # exploration on the drifted testbed
+    assert gp["profile"] >= gp["constant"], \
+        f"profile-calibrated goodput {gp['profile']:.3f} < " \
+        f"cold-start {gp['constant']:.3f}"
+
+    results["kernel"] = kernel_rows(fast=fast)
+    return results
+
+
+def kernel_rows(fast: bool = False):
+    """Before/after for the paged-attention page tiling (satellite of the
+    same calibration PR: the profile harness is also the kernel bench)."""
+    mb = paged_kernel_microbench(
+        batch=2, kv_heads=2, q_per_kv=2, head_dim=64, page_size=16,
+        n_pages=8, pages_per_tile=4, iters=1 if fast else 3)
+    emit("fig17_paged_baseline", mb["baseline_us"],
+         f"grid_steps={mb['baseline_steps']} T=1")
+    emit("fig17_paged_tiled", mb["tiled_us"],
+         f"grid_steps={mb['tiled_steps']} T={mb['pages_per_tile']}")
+    emit("fig17_paged_tiling_speedup", 0.0,
+         f"steps={mb['speedup_steps']:.2f}x "
+         f"wall={mb['speedup_wall']:.2f}x "
+         f"max_err={mb['max_err_tiled']:.2e}")
+    # off-TPU the interpreter's wall-clock is not meaningful, so the
+    # acceptance proxy is the grid-step reduction; correctness is vs the
+    # dense JAX reference either way
+    assert mb["speedup_steps"] >= 1.2, mb
+    assert mb["max_err_baseline"] < 1e-3 and mb["max_err_tiled"] < 1e-3, mb
+    return mb

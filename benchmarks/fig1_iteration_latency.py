@@ -1,12 +1,14 @@
 """Fig. 1: per-iteration inference latency across GPU architectures under
-varying batch sizes (fixed 100-in/200-out request shape)."""
+varying batch sizes (fixed 100-in/200-out request shape).  When measured
+``LatencyProfile`` artifacts are supplied, the analytic lines get a
+profile-calibrated overlay row per hardware."""
 from __future__ import annotations
 
 from repro.cluster import hardware as hwlib
-from benchmarks.common import emit, timed
+from benchmarks.common import emit
 
 
-def run(model: str = "llama3.1-8b"):
+def run(model: str = "llama3.1-8b", profiles=None):
     fp = hwlib.footprint(model)
     batches = [1, 2, 4, 8, 16, 32, 64]
     lines = {}
@@ -15,10 +17,15 @@ def run(model: str = "llama3.1-8b"):
         lat = [hwlib.decode_iteration_time(hw, fp, b, avg_ctx=200.0) * 1e3
                for b in batches]
         lines[name] = lat
-    (_, us) = (None, 0.0)
     for name, lat in lines.items():
         emit(f"fig1_iter_latency_{name}", 0.0,
              "ms@b=" + "/".join(f"{v:.1f}" for v in lat))
+        if profiles and name in profiles:
+            prof = profiles[name]
+            mlat = [prof.decode_time(b, 200.0) * 1e3 for b in batches]
+            emit(f"fig1_iter_latency_{name}_measured", 0.0,
+                 f"{prof.provenance}: ms@b="
+                 + "/".join(f"{v:.1f}" for v in mlat))
     # the paper's qualitative claim: ordering V100 > A40 > A800 > H800 at
     # every batch size, with latency flat-then-rising in batch
     ok = all(lines["V100"][i] > lines["A800"][i] > lines["H800"][i]

@@ -35,7 +35,7 @@ def _suites(fast: bool) -> dict:
                             fig9_migration, fig10_sensitivity,
                             fig11_overhead, fig12_workflows,
                             fig13_autoscale, fig14_spot, fig15_rectify,
-                            fig16_sharded, roofline)
+                            fig16_sharded, fig17_calibration, roofline)
 
     n_sim = 200 if fast else 400
     epochs = 12 if fast else 40
@@ -76,6 +76,11 @@ def _suites(fast: bool) -> dict:
         "fig16": _Suite(fig16_sharded.run, kw=dict(n=1200),
                         fast_kw=dict(n=600, full_trace=False),
                         seedable=True),
+        # the sim is cheap (<1s/seed), so fast mode keeps the full trace
+        # (a shorter diurnal span blunts the provision churn the figure
+        # measures) and only trims the kernel microbench iterations
+        "fig17": _Suite(fig17_calibration.run, kw=dict(n=900),
+                        fast_kw=dict(fast=True), seedable=True),
         "roofline": _Suite(roofline.run),
     }
 

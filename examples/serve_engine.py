@@ -16,7 +16,8 @@ def main():
     cfg = reduce_config(get_config("llama3.1-8b"))
     print(f"serving {cfg.name}: {cfg.num_layers}L d={cfg.d_model} "
           f"vocab={cfg.vocab_size}")
-    engines = [InferenceEngine(cfg, max_batch=4, max_len=96, seed=i)
+    engines = [InferenceEngine(cfg, max_batch=4, max_len=96, seed=i,
+                               prefill_chunk=16)
                for i in range(2)]
     est = EMAEstimator()
     rng = np.random.default_rng(0)
@@ -44,11 +45,10 @@ def main():
     while sum(len(e.completed) for e in engines) < len(reqs):
         for gid, e in enumerate(engines):
             e.step()
-            for kind, size, dt in e.events:
+            for kind, size, dt in e.drain_events():
                 (est.observe_decode_iter if kind == "decode"
                  else est.observe_prefill)(gid, *((dt,) if kind == "decode"
                                                   else (size, dt)))
-            e.events.clear()
 
     for gid, e in enumerate(engines):
         d = est.snapshot(gid).d * 1e3

@@ -1,7 +1,13 @@
-"""Declarative experiment harness over the ControlPlane API."""
+"""Declarative experiment harness over the ControlPlane API, plus the
+measured-latency-profile calibration artifacts the simulator consumes."""
 from repro.bench.harness import (ExperimentResult, ExperimentSpec,
                                  ResultList, aggregate_results,
                                  run_experiment)
+from repro.bench.profile import (LatencyProfile, analytic_profile,
+                                 measure_engine_profile,
+                                 paged_kernel_microbench)
 
 __all__ = ["ExperimentSpec", "ExperimentResult", "ResultList",
-           "aggregate_results", "run_experiment"]
+           "aggregate_results", "run_experiment",
+           "LatencyProfile", "analytic_profile",
+           "measure_engine_profile", "paged_kernel_microbench"]

@@ -139,9 +139,17 @@ def footprint(model_name: str) -> ModelFootprint:
 
 
 def decode_iteration_time(hw: HardwareSpec, fp: ModelFootprint,
-                          batch: int, avg_ctx: float) -> float:
+                          batch: int, avg_ctx: float,
+                          profile=None) -> float:
     """Seconds for one decode iteration of ``batch`` requests whose mean
-    context length is ``avg_ctx``."""
+    context length is ``avg_ctx``.
+
+    When a measured :class:`~repro.bench.profile.LatencyProfile` is
+    supplied, it answers instead of the analytic roofline (bilinear over
+    the measured grid, calibrated analytic beyond it) — the catalog
+    constants become the fallback, not the truth."""
+    if profile is not None:
+        return profile.decode_time(batch, avg_ctx)
     if batch <= 0:
         return 0.0
     flops = 2.0 * fp.n_active * batch
@@ -153,8 +161,11 @@ def decode_iteration_time(hw: HardwareSpec, fp: ModelFootprint,
 
 
 def prefill_time(hw: HardwareSpec, fp: ModelFootprint, n_tokens: int,
-                 cached_prefix: int = 0) -> float:
-    """Seconds to prefill ``n_tokens`` (minus reusable cached prefix)."""
+                 cached_prefix: int = 0, profile=None) -> float:
+    """Seconds to prefill ``n_tokens`` (minus reusable cached prefix).
+    A measured profile, when supplied, overrides the analytic model."""
+    if profile is not None:
+        return profile.prefill_time(n_tokens, cached_prefix)
     n = max(n_tokens - cached_prefix, 0)
     if n == 0:
         return hw.overhead_ms / 1e3

@@ -107,10 +107,13 @@ class Instance:
     def __init__(self, iid: int, hw: hwlib.HardwareSpec,
                  fp: hwlib.ModelFootprint, prefix_capacity: int = 8,
                  session_capacity: int = 16, state: str = "active",
-                 started_at: float = 0.0):
+                 started_at: float = 0.0, profile=None):
         self.iid = iid
         self.hw = hw
         self.fp = fp
+        # measured LatencyProfile governing this instance's iteration
+        # times (None -> analytic roofline, the pre-calibration model)
+        self.profile = profile
         self.queue: deque = deque()
         self.running: List[SimRequest] = []
         self.alive = True
@@ -214,14 +217,40 @@ class Instance:
 class Cluster:
     def __init__(self, instances: Sequence[Instance],
                  net: miglib.NetworkSpec = miglib.ETHERNET_10G,
-                 ema_alpha: float = 0.3):
+                 ema_alpha: float = 0.3, profiles=None,
+                 seed_priors: bool = True, prior_profiles=None):
         self.instances = list(instances)
         self.net = net
         self.estimator = EMAEstimator(alpha=ema_alpha)
+        # calibration: hardware-name -> LatencyProfile.  Every instance
+        # of that hardware (present AND elastically provisioned later)
+        # gets the profile as its iteration-time truth; with
+        # ``seed_priors`` its estimator entry is also born at the
+        # profile-derived (q, p, d) instead of the hardcoded defaults.
+        # ``prior_profiles``, when given, seeds BELIEFS from a different
+        # profile set than the truth — the stale-calibration experiment
+        # (fig17's "catalog" arm: the hardware drifted, the priors did
+        # not).
+        self.profiles = dict(profiles or {})
+        self.seed_priors = seed_priors
+        self.prior_profiles = dict(prior_profiles) if prior_profiles else None
+        for g in self.instances:
+            self._apply_profile(g)
         # monotone snapshot counter: every ClusterView.capture stamps
         # the next version, so views of this cluster are totally ordered
         # and a stale-view consumer can prove it never steps backwards
         self._view_seq = itertools.count(1)
+
+    def _apply_profile(self, g: Instance):
+        if g.profile is None:
+            g.profile = self.profiles.get(g.hw.name)
+        if not self.seed_priors:
+            return
+        src = g.profile
+        if self.prior_profiles is not None:
+            src = self.prior_profiles.get(g.hw.name, src)
+        if src is not None:
+            self.estimator.set_prior(g.iid, src.priors())
 
     def next_view_version(self) -> int:
         return next(self._view_seq)
@@ -238,6 +267,7 @@ class Cluster:
         g = Instance(len(self.instances), hw, fp, state="provisioning",
                      started_at=t)
         self.instances.append(g)
+        self._apply_profile(g)
         return g
 
     @staticmethod
@@ -545,7 +575,8 @@ class Simulator:
         # --- iteration time: decode batch + prefill chunk share -----------
         avg_ctx = (float(np.mean([r.context_len for r in g.running]))
                    if g.running else 0.0)
-        dt_decode = (hwlib.decode_iteration_time(g.hw, g.fp, b, avg_ctx)
+        dt_decode = (hwlib.decode_iteration_time(g.hw, g.fp, b, avg_ctx,
+                                                 profile=g.profile)
                      if b else 0.0)
         chunk_tokens = 0
         if pf is not None:
@@ -555,11 +586,20 @@ class Simulator:
                 remaining_pf = (pf.prefill_len - pf.prefill_hit
                                 - pf.prefill_progress)
             chunk_tokens = min(self.prefill_chunk, max(remaining_pf, 0))
-            dt_chunk = 2.0 * g.fp.n_active * chunk_tokens / g.hw.eff_flops
+            if g.profile is not None:
+                dt_chunk = g.profile.chunk_time(chunk_tokens)
+            else:
+                dt_chunk = (2.0 * g.fp.n_active * chunk_tokens
+                            / g.hw.eff_flops)
         else:
             dt_chunk = 0.0
         if b:
             dt = dt_decode + dt_chunk
+        elif g.profile is not None:
+            # prefill-only iteration under a measured profile: the
+            # profile's prefill grid already folds in the weight-read
+            # floor and fixed overhead
+            dt = g.profile.prefill_time(chunk_tokens)
         else:
             weight_read = g.fp.n_params * g.fp.dtype_bytes / g.hw.eff_bw
             dt = max(dt_chunk, weight_read) + g.hw.overhead_ms / 1e3

@@ -10,7 +10,7 @@ instance preference is what must be right, not the absolute values.
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict
+from typing import Dict, Optional
 
 
 @dataclasses.dataclass
@@ -22,15 +22,32 @@ class InstanceEstimate:
 
 
 class EMAEstimator:
-    """GPUStatusMonitor: maintains (q_g, p_g, d_g) per instance."""
+    """GPUStatusMonitor: maintains (q_g, p_g, d_g) per instance.
 
-    def __init__(self, alpha: float = 0.3):
+    Cold start: an instance with no observations yet is born at either
+    the hardcoded :class:`InstanceEstimate` defaults or — when a
+    measured :class:`~repro.bench.profile.LatencyProfile` prior has been
+    registered via ``set_prior`` — the profile-derived (q, p, d), with
+    ``n_obs`` pre-credited so routers rank it instead of exploring it.
+    Priors only seed the FIRST estimate; observations then EMA over them
+    exactly as before."""
+
+    def __init__(self, alpha: float = 0.3,
+                 priors: Optional[Dict[int, InstanceEstimate]] = None):
         self.alpha = alpha
         self.est: Dict[int, InstanceEstimate] = {}
+        self.priors: Dict[int, InstanceEstimate] = dict(priors or {})
+
+    def set_prior(self, gid: int, prior: InstanceEstimate):
+        """Register a cold-start prior for ``gid``; a no-op for an
+        instance that already has live estimates."""
+        self.priors[gid] = prior
 
     def _get(self, gid: int) -> InstanceEstimate:
         if gid not in self.est:
-            self.est[gid] = InstanceEstimate()
+            prior = self.priors.get(gid)
+            self.est[gid] = (dataclasses.replace(prior)
+                             if prior is not None else InstanceEstimate())
         return self.est[gid]
 
     def _ema(self, old: float, new: float) -> float:

@@ -6,12 +6,22 @@ TPU), manages request lifecycles, reports the black-box timing events the
 EMA estimator consumes, and supports token-ID checkpointing of in-flight
 requests (the migration/fault-tolerance path).  On CPU it serves reduced
 configs; on TPU the same class serves full configs on a mesh.
+
+Chunked prefill (``prefill_chunk=N``): instead of admitting a prompt as
+one monolithic prefill that stalls every co-batched decode, the queue
+head is staged into a linear scratch cache and advanced at most N prompt
+tokens per ``step()``, interleaved with the decode batch — Sarathi/
+AccelGen-style iteration shaping, which is what keeps decode TPOT stable
+under long-prompt arrivals.  Only full/window-attention configs qualify
+(mamba/MLA states are not chunk-resumable); others silently keep the
+one-shot path.
 """
 from __future__ import annotations
 
 import dataclasses
 import time
-from typing import Dict, List, Optional
+from collections import deque
+from typing import Deque, List, Optional
 
 import jax
 import jax.numpy as jnp
@@ -19,7 +29,8 @@ import numpy as np
 
 from repro.configs.base import ModelConfig
 from repro.distributed.context import NULL_CTX, ShardCtx
-from repro.models import decode_step, init_cache, init_params, prefill
+from repro.models import (decode_step, init_cache, init_params, prefill,
+                          prefill_chunk, ring_convert_cache)
 from repro.models.model import logits_fn
 
 
@@ -43,7 +54,8 @@ class InferenceEngine:
 
     def __init__(self, cfg: ModelConfig, params=None, *, max_batch: int = 8,
                  max_len: int = 256, ctx: ShardCtx = NULL_CTX, seed: int = 0,
-                 greedy: bool = True):
+                 greedy: bool = True, prefill_chunk: Optional[int] = None,
+                 max_events: int = 4096):
         self.cfg = cfg
         self.ctx = ctx
         self.max_batch = max_batch
@@ -56,8 +68,20 @@ class InferenceEngine:
         self.queue: List[EngineRequest] = []
         self._decode = jax.jit(
             lambda p, c, t: decode_step(p, cfg, c, t, ctx=ctx))
-        # timing observations for the estimator (black-box signals)
-        self.events: List[tuple] = []
+        # chunked prefill: only full/window mixers are chunk-resumable
+        chunkable = all(blk.mixer in ("full", "window")
+                        for blk in cfg.layer_list())
+        self.prefill_chunk = (prefill_chunk
+                              if (prefill_chunk and chunkable) else None)
+        self._chunk_fn = jax.jit(
+            lambda p, c, t, n: prefill_chunk_step(p, cfg, c, t, n, ctx))
+        # one request staged at a time: (slot, req, linear cache, t0,
+        # tokens consumed, last-chunk logits)
+        self._staging: Optional[dict] = None
+        # timing observations for the estimator (black-box signals):
+        # bounded ring — consumers call drain_events(), stragglers don't
+        # leak memory on long-running engines
+        self.events: Deque[tuple] = deque(maxlen=max_events)
         self.completed: List[EngineRequest] = []
 
     # -- request lifecycle -----------------------------------------------------
@@ -65,9 +89,20 @@ class InferenceEngine:
     def submit(self, req: EngineRequest):
         self.queue.append(req)
 
+    def drain_events(self) -> List[tuple]:
+        """Hand the accumulated (kind, size, dt) timing events to the
+        caller and clear the buffer — the estimator-facing consumer API."""
+        ev = list(self.events)
+        self.events.clear()
+        return ev
+
     def checkpoint_request(self, rid: int) -> Optional[EngineRequest]:
         """Token-ID snapshot of an in-flight request (migration / failure
         resubmission): frees its slot, returns the portable state."""
+        if self._staging is not None and self._staging["req"].rid == rid:
+            req = self._staging["req"]
+            self._staging = None        # partial prefill is discarded:
+            return req                  # token IDs re-prefill at the target
         for i, r in enumerate(self.slots):
             if r is not None and r.rid == rid:
                 self.slots[i] = None
@@ -77,6 +112,8 @@ class InferenceEngine:
                 self.queue.remove(r)
                 return r
         return None
+
+    # -- admission: one-shot and chunked prefill ------------------------------
 
     def _admit(self):
         for i in range(self.max_batch):
@@ -91,22 +128,62 @@ class InferenceEngine:
         toks = jnp.asarray(req.tokens, jnp.int32)[None]
         logits, cache1 = prefill(self.params, self.cfg, toks,
                                  max_len=self.max_len, ctx=self.ctx)
-        # splice the single-request cache into the batch cache at `slot`
+        self._splice(slot, cache1, int(cache1["pos"][0]))
+        nxt = int(jnp.argmax(logits[0]))
+        req.tokens.append(nxt)
+        self.slots[slot] = req
+
+    def _splice(self, slot: int, cache1, pos: int):
+        """Copy a single-request (ring-layout) cache into the batch cache
+        at ``slot``."""
         def splice(batch_leaf, one_leaf):
             return batch_leaf.at[:, slot].set(one_leaf[:, 0]) \
                 if batch_leaf.ndim >= 2 else batch_leaf
         for si in range(len(self.cache["stages"])):
             self.cache["stages"][si] = jax.tree.map(
                 splice, self.cache["stages"][si], cache1["stages"][si])
-        self.cache["pos"] = self.cache["pos"].at[slot].set(
-            int(cache1["pos"][0]))
-        nxt = int(jnp.argmax(logits[0]))
-        req.tokens.append(nxt)
-        self.slots[slot] = req
+        self.cache["pos"] = self.cache["pos"].at[slot].set(pos)
+
+    def _advance_staged(self):
+        """Begin and/or advance the staged prefill by at most one chunk —
+        the per-iteration prefill-token budget."""
+        if self._staging is None:
+            free = next((i for i, r in enumerate(self.slots) if r is None),
+                        None)
+            if free is None or not self.queue:
+                return
+            self._staging = {
+                "slot": free, "req": self.queue.pop(0),
+                "cache": init_cache(self.cfg, 1, self.max_len,
+                                    dtype=jnp.float32, ring=False),
+                "t0": time.perf_counter(), "done": 0}
+        st = self._staging
+        req, C = st["req"], self.prefill_chunk
+        n = min(C, req.prompt_len - st["done"])
+        toks = np.zeros((1, C), np.int32)
+        toks[0, :n] = req.tokens[st["done"]:st["done"] + n]
+        logits, st["cache"] = self._chunk_fn(
+            self.params, st["cache"], jnp.asarray(toks),
+            jnp.asarray([n], jnp.int32))
+        st["done"] += n
+        if st["done"] < req.prompt_len:
+            return
+        # prompt complete: ring-convert, splice, emit the first token
+        ring = ring_convert_cache(self.cfg, st["cache"], self.max_len,
+                                  req.prompt_len)
+        self._splice(st["slot"], ring, req.prompt_len)
+        req.tokens.append(int(jnp.argmax(logits[0])))
+        self.slots[st["slot"]] = req
+        self.events.append(("prefill", req.prompt_len,
+                            time.perf_counter() - st["t0"]))
+        self._staging = None
 
     def step(self) -> int:
         """One engine iteration; returns number of active requests."""
-        self._admit()
+        if self.prefill_chunk:
+            self._advance_staged()
+        else:
+            self._admit()
         active = [i for i, r in enumerate(self.slots) if r is not None]
         if not active:
             return 0
@@ -134,6 +211,13 @@ class InferenceEngine:
     def run_until_drained(self, max_iters: int = 10000):
         for _ in range(max_iters):
             n = self.step()
-            if n == 0 and not self.queue:
+            if n == 0 and not self.queue and self._staging is None:
                 break
         return self.completed
+
+
+def prefill_chunk_step(params, cfg, cache, tokens, n_valid, ctx):
+    """Module-level jit target for one staged chunk (keeps the jitted
+    closure picklable and the engine body readable)."""
+    return prefill_chunk(params, cfg, cache, tokens, n_valid=n_valid,
+                         ctx=ctx)

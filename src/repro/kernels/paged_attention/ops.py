@@ -9,8 +9,13 @@ from repro.kernels.paged_attention.paged_attention import \
     paged_attention_pallas
 
 
-@jax.jit
-def paged_attention(q, k_pages, v_pages, block_tables, context_lens):
+@functools.partial(jax.jit, static_argnames=("pages_per_tile",))
+def paged_attention(q, k_pages, v_pages, block_tables, context_lens,
+                    pages_per_tile: int = 4):
+    """``pages_per_tile`` KV pages stream per grid step (static): 4 is
+    the default tiling; 1 recovers the single-page-per-step baseline
+    (the before/after axis of ``bench.profile.paged_kernel_microbench``)."""
     return paged_attention_pallas(
         q, k_pages, v_pages, block_tables, context_lens,
+        pages_per_tile=pages_per_tile,
         interpret=jax.default_backend() != "tpu")

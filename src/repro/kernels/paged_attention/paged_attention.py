@@ -2,12 +2,21 @@
 adapted to TPU, DESIGN.md §3/§4).
 
 One query token per sequence attends over a block-table-indexed paged KV
-cache.  Grid = (batch, kv_heads, num_pages); the block table and context
-lengths ride in scalar-prefetch memory (pltpu.PrefetchScalarGridSpec) so
-the page index_map can dereference HBM pages before the tiles stream into
-VMEM.  Online softmax carries (m, l, acc) for the G grouped q heads live
-in VMEM scratch across the page sweep; pages past the context length are
-skipped.
+cache.  Grid = (batch, kv_heads, num_page_tiles): each grid step streams
+``pages_per_tile`` KV pages into VMEM (the block table and context
+lengths ride in scalar-prefetch memory — pltpu.PrefetchScalarGridSpec —
+so every page's index_map can dereference HBM before its tile loads),
+amortizing per-step grid overhead over several pages of online-softmax
+work.  (m, l, acc) for the G grouped q heads live in VMEM scratch across
+the tile sweep; pages past the context length are skipped per page, so a
+short sequence pays for the pages it has, not the padded maximum.
+
+Pages inside a tile come from the block table individually — tiling does
+NOT require physically contiguous pages (each of the T page slots is its
+own input operand with its own ``bt[b, t*T + i]`` index map).  Ragged
+tails are handled by padding the block table with page 0: a padded
+slot's base position is >= n_pages * page >= ctx, so the per-page skip
+masks it and the fetched tile is never read.
 """
 from __future__ import annotations
 
@@ -21,73 +30,92 @@ from jax.experimental.pallas import tpu as pltpu
 NEG_INF = -1e30
 
 
-def _paged_kernel(bt_ref, ctx_ref, q_ref, k_ref, v_ref, o_ref,
-                  m_scr, l_scr, acc_scr, *, page: int, n_pages: int,
-                  scale: float):
+def _paged_kernel(bt_ref, ctx_ref, q_ref, *refs, page: int, n_tiles: int,
+                  tile: int, scale: float):
+    k_refs = refs[:tile]
+    v_refs = refs[tile:2 * tile]
+    o_ref = refs[2 * tile]
+    m_scr, l_scr, acc_scr = refs[2 * tile + 1:]
     b = pl.program_id(0)
-    p = pl.program_id(2)
+    t = pl.program_id(2)
 
-    @pl.when(p == 0)
+    @pl.when(t == 0)
     def _init():
         m_scr[...] = jnp.full_like(m_scr, NEG_INF)
         l_scr[...] = jnp.zeros_like(l_scr)
         acc_scr[...] = jnp.zeros_like(acc_scr)
 
     ctx = ctx_ref[b]
+    q = q_ref[0, 0].astype(jnp.float32)                  # [G, hd]
 
-    @pl.when(p * page < ctx)
-    def _compute():
-        q = q_ref[0, 0].astype(jnp.float32)              # [G, hd]
-        k = k_ref[0, 0].astype(jnp.float32)              # [page, hd]
-        v = v_ref[0, 0].astype(jnp.float32)
-        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
-                                preferred_element_type=jnp.float32) * scale
-        pos = p * page + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
-        s = jnp.where(pos < ctx, s, NEG_INF)
+    for i in range(tile):
+        base = (t * tile + i) * page
 
-        m_prev = m_scr[...]
-        m_new = jnp.maximum(m_prev, jnp.max(s, axis=1, keepdims=True))
-        pr = jnp.exp(s - m_new)
-        alpha = jnp.exp(m_prev - m_new)
-        l_scr[...] = l_scr[...] * alpha + jnp.sum(pr, axis=1, keepdims=True)
-        acc_scr[...] = acc_scr[...] * alpha + jax.lax.dot(
-            pr, v, preferred_element_type=jnp.float32)
-        m_scr[...] = m_new
+        @pl.when(base < ctx)
+        def _compute(i=i, base=base):
+            k = k_refs[i][0, 0].astype(jnp.float32)      # [page, hd]
+            v = v_refs[i][0, 0].astype(jnp.float32)
+            s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                    preferred_element_type=jnp.float32
+                                    ) * scale
+            pos = base + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+            s = jnp.where(pos < ctx, s, NEG_INF)
 
-    @pl.when(p == n_pages - 1)
+            m_prev = m_scr[...]
+            m_new = jnp.maximum(m_prev, jnp.max(s, axis=1, keepdims=True))
+            pr = jnp.exp(s - m_new)
+            alpha = jnp.exp(m_prev - m_new)
+            l_scr[...] = (l_scr[...] * alpha
+                          + jnp.sum(pr, axis=1, keepdims=True))
+            acc_scr[...] = acc_scr[...] * alpha + jax.lax.dot(
+                pr, v, preferred_element_type=jnp.float32)
+            m_scr[...] = m_new
+
+    @pl.when(t == n_tiles - 1)
     def _finalize():
         l = jnp.maximum(l_scr[...], 1e-30)
         o_ref[0, 0] = (acc_scr[...] / l).astype(o_ref.dtype)
 
 
+def _page_index(b, h, t, bt, ctx, *, i: int, tile: int):
+    return (h, bt[b, t * tile + i], 0, 0)
+
+
 def paged_attention_pallas(q, k_pages, v_pages, block_tables, context_lens,
-                           *, interpret: bool = False):
+                           *, pages_per_tile: int = 4,
+                           interpret: bool = False):
     """q: [B, H, hd]; k/v_pages: [P, page, KV, hd];
     block_tables: [B, n_pages]; context_lens: [B] -> [B, H, hd]."""
     B, H, hd = q.shape
     page, KV = k_pages.shape[1], k_pages.shape[2]
     G = H // KV
     n_pages = block_tables.shape[1]
+    T = max(1, min(pages_per_tile, n_pages))
+    n_tiles = -(-n_pages // T)
+    pad = n_tiles * T - n_pages
+    if pad:
+        block_tables = jnp.pad(block_tables, ((0, 0), (0, pad)))
 
     qg = q.reshape(B, KV, G, hd)
     # pages laid out [KV, P, page, hd] so a tile is one head's page
     kp = k_pages.transpose(2, 0, 1, 3)
     vp = v_pages.transpose(2, 0, 1, 3)
 
-    kernel = functools.partial(_paged_kernel, page=page, n_pages=n_pages,
-                               scale=hd ** -0.5)
+    kernel = functools.partial(_paged_kernel, page=page, n_tiles=n_tiles,
+                               tile=T, scale=hd ** -0.5)
+    page_specs = [
+        pl.BlockSpec((1, 1, page, hd),
+                     functools.partial(_page_index, i=i, tile=T))
+        for i in range(T)]
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=2,
-        grid=(B, KV, n_pages),
-        in_specs=[
-            pl.BlockSpec((1, 1, G, hd), lambda b, h, p, bt, ctx: (b, h, 0, 0)),
-            pl.BlockSpec((1, 1, page, hd),
-                         lambda b, h, p, bt, ctx: (h, bt[b, p], 0, 0)),
-            pl.BlockSpec((1, 1, page, hd),
-                         lambda b, h, p, bt, ctx: (h, bt[b, p], 0, 0)),
-        ],
+        grid=(B, KV, n_tiles),
+        in_specs=(
+            [pl.BlockSpec((1, 1, G, hd),
+                          lambda b, h, t, bt, ctx: (b, h, 0, 0))]
+            + page_specs + page_specs),
         out_specs=pl.BlockSpec((1, 1, G, hd),
-                               lambda b, h, p, bt, ctx: (b, h, 0, 0)),
+                               lambda b, h, t, bt, ctx: (b, h, 0, 0)),
         scratch_shapes=[
             pltpu.VMEM((G, 1), jnp.float32),
             pltpu.VMEM((G, 1), jnp.float32),
@@ -99,5 +127,5 @@ def paged_attention_pallas(q, k_pages, v_pages, block_tables, context_lens,
         grid_spec=grid_spec,
         out_shape=jax.ShapeDtypeStruct((B, KV, G, hd), q.dtype),
         interpret=interpret,
-    )(block_tables, context_lens, qg, kp, vp)
+    )(block_tables, context_lens, qg, *([kp] * T), *([vp] * T))
     return out.reshape(B, H, hd)

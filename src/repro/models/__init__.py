@@ -1,5 +1,6 @@
 from repro.models.model import (decode_step, init_cache, init_params,
-                                model_forward, prefill)
+                                model_forward, prefill, prefill_chunk,
+                                ring_convert_cache)
 
 __all__ = ["decode_step", "init_cache", "init_params", "model_forward",
-           "prefill"]
+           "prefill", "prefill_chunk", "ring_convert_cache"]

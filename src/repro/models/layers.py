@@ -207,6 +207,37 @@ def attn_decode(p, cfg: ModelConfig, x, cache_k, cache_v, pos,
     return y @ p["wo"], (cache_k, cache_v)
 
 
+def attn_chunk(p, cfg: ModelConfig, x, cache_k, cache_v, pos0,
+               window: Optional[int], ctx: ShardCtx = NULL_CTX):
+    """Chunked prefill: extend a LINEAR (slot == position) KV cache by C
+    prompt tokens starting at ``pos0``.  x: [B,C,d]; cache_k/v:
+    [B,S,KV,hd] with S >= pos0 + C; pos0: [B].
+
+    Unlike the decode ring buffer, slots here ARE absolute positions (the
+    staging cache never wraps during a prefill), so the causal/window
+    mask is a direct position comparison and earlier chunks' keys stay
+    addressable for this chunk's queries.  Ring conversion happens once,
+    at splice time (``model.ring_convert_cache``)."""
+    B, C, _ = x.shape
+    S = cache_k.shape[1]
+    h = rms_norm(x, p["ln"], cfg.norm_eps)
+    positions = pos0[:, None] + jnp.arange(C)[None, :]
+    q, k_new, v_new = _qkv(p, cfg, h, positions, ctx)
+
+    def put(ck, kn, p0):
+        return lax.dynamic_update_slice(ck, kn, (p0, 0, 0))
+
+    cache_k = jax.vmap(put)(cache_k, k_new, pos0)
+    cache_v = jax.vmap(put)(cache_v, v_new, pos0)
+    slot = jnp.arange(S)[None, None, :]
+    qpos = positions[:, :, None]
+    mask = slot <= qpos                    # [B, C, S]
+    if window is not None:
+        mask &= slot > qpos - window
+    y = _sdpa(q, cache_k, cache_v, mask, cfg.logit_softcap)
+    return y @ p["wo"], (cache_k, cache_v)
+
+
 # ---------------------------------------------------------------------------
 # MLA (DeepSeek-V2 multi-head latent attention)
 # ---------------------------------------------------------------------------

@@ -227,11 +227,18 @@ def prefill(params, cfg: ModelConfig, tokens, max_len: int,
 
 
 def init_cache(cfg: ModelConfig, batch: int, max_len: int,
-               dtype=jnp.bfloat16):
-    """Empty cache (decode-from-scratch or dry-run ShapeDtypeStruct base)."""
+               dtype=jnp.bfloat16, ring: bool = True):
+    """Empty cache (decode-from-scratch or dry-run ShapeDtypeStruct base).
+
+    ``ring=False`` sizes every attention buffer ``max_len`` with slot ==
+    absolute position (no wrap): the staging layout ``prefill_chunk``
+    writes into, converted to ring layout once via
+    :func:`ring_convert_cache` when the finished prefill is spliced into
+    a decode batch."""
     def blk_cache(blk: BlockSpec):
         if blk.mixer in ("full", "window"):
-            S = min(blk.window, max_len) if blk.window else max_len
+            S = (min(blk.window, max_len)
+                 if (blk.window and ring) else max_len)
             shp = (batch, S, cfg.num_kv_heads, cfg.head_dim)
             return {"k": jnp.zeros(shp, dtype), "v": jnp.zeros(shp, dtype)}
         if blk.mixer == "mla":
@@ -261,6 +268,106 @@ def init_cache(cfg: ModelConfig, batch: int, max_len: int,
                         a[None], (stage.repeat,) + a.shape).copy(), e)
         stages.append(sc)
     return {"stages": stages, "pos": jnp.zeros((batch,), jnp.int32)}
+
+
+def prefill_chunk(params, cfg: ModelConfig, cache, tokens, n_valid=None,
+                  ctx: ShardCtx = NULL_CTX):
+    """Extend a LINEAR cache (``init_cache(..., ring=False)``) by one
+    prompt chunk — the engine's bounded-prefill-budget iteration, so a
+    long prompt is admitted as several cheap steps interleaved with
+    decode instead of one monolithic stall.
+
+    tokens: [B, C] int32 (tail may be padding); ``n_valid``: [B] count
+    of real tokens in the chunk (default: all C).  Padded positions
+    write garbage K/V past the prompt; they are sliced off at ring
+    conversion and masked (slot <= pos) until overwritten during decode,
+    so they are never read.  Returns (logits at the last valid token
+    [B, V], cache with ``pos`` advanced by ``n_valid``).
+
+    Only full/window attention mixers are supported: mamba/MLA decode
+    states are not chunk-resumable in this layout (the engine gates
+    chunking off for those configs and falls back to one-shot prefill).
+    """
+    for blk in cfg.layer_list():
+        if blk.mixer not in ("full", "window"):
+            raise NotImplementedError(
+                f"prefill_chunk supports full/window attention only, "
+                f"got mixer {blk.mixer!r}")
+    pos0 = cache["pos"]
+    B, C = tokens.shape
+    if n_valid is None:
+        n_valid = jnp.full((B,), C, jnp.int32)
+    x = jnp.take(params["embed"], tokens, axis=0)
+    bspec = ctx.batch_spec_entry(B)
+    x = ctx.constraint(x, bspec, ctx.seq_entry(C), None)
+
+    new_stage_caches = []
+    for si, stage in enumerate(cfg.stages):
+        sp = params["stages"][si]
+        sc = cache["stages"][si]
+
+        # same carry-aliased scan as decode_step: the staging cache is
+        # updated in place at the layer index, one buffer end to end
+        def body(carry, inp, stage=stage):
+            xx, cache_full = carry
+            i, layer_p = inp
+            layer_c = jax.tree.map(
+                lambda a: lax.dynamic_index_in_dim(a, i, 0, keepdims=False),
+                cache_full)
+            new_c = {}
+            for pi, blk in enumerate(stage.pattern):
+                p_ = layer_p[f"blk{pi}"]
+                c_ = layer_c[f"blk{pi}"]
+                y, (ck, cv) = L.attn_chunk(
+                    p_["attn"], cfg, xx, c_["k"], c_["v"], pos0,
+                    blk.window, ctx)
+                xx = xx + y
+                new_c[f"blk{pi}"] = {"k": ck, "v": cv}
+                if blk.ffn == "dense":
+                    xx = xx + L.ffn_forward(p_["ffn"], cfg, xx, ctx)
+                elif blk.ffn == "moe":
+                    y2, _ = L.moe_forward(p_["ffn"], cfg, xx, ctx)
+                    xx = xx + y2
+            xx = ctx.constraint(xx, bspec, ctx.seq_entry(C), None)
+            cache_full = jax.tree.map(
+                lambda a, nc: lax.dynamic_update_index_in_dim(a, nc, i, 0),
+                cache_full, new_c)
+            return (xx, cache_full), None
+
+        idx = jnp.arange(stage.repeat)
+        (x, new_sc), _ = lax.scan(body, (x, sc), (idx, sp))
+        new_stage_caches.append(new_sc)
+
+    x = L.rms_norm(x, params["final_norm"], cfg.norm_eps)
+    last = x[jnp.arange(B), jnp.clip(n_valid - 1, 0, C - 1)]
+    logits = logits_fn(params, cfg, last)
+    return logits, {"stages": new_stage_caches, "pos": pos0 + n_valid}
+
+
+def ring_convert_cache(cfg: ModelConfig, cache, max_len: int, length: int):
+    """Convert a finished linear staging cache (``prefill_chunk`` layout,
+    slot == position, ``length`` valid rows) into the ring layout
+    ``decode_step`` expects — identical to what ``prefill`` would have
+    produced via ``_to_ring``.  Full-attention buffers embed unchanged;
+    window buffers keep the last ``min(length, window)`` rows at slots
+    ``t % S``."""
+    stages = []
+    for si, stage in enumerate(cfg.stages):
+        sc = cache["stages"][si]
+        new_sc = {}
+        for pi, blk in enumerate(stage.pattern):
+            key = f"blk{pi}"
+            if key not in sc:
+                continue
+            e = sc[key]
+            if blk.mixer in ("full", "window"):
+                S = min(blk.window, max_len) if blk.window else max_len
+                conv = jax.vmap(lambda a, S=S: _to_ring(a[:, :length], S))
+                new_sc[key] = {"k": conv(e["k"]), "v": conv(e["v"])}
+            else:
+                new_sc[key] = e
+        stages.append(new_sc)
+    return {"stages": stages, "pos": cache["pos"]}
 
 
 def decode_step(params, cfg: ModelConfig, cache, tokens,

@@ -66,6 +66,53 @@ def test_token_id_checkpoint_roundtrip(engine):
     assert len(snap.tokens) >= 10
 
 
+def test_drain_events_bounded_and_clearing():
+    cfg = reduce_config(get_config("llama3.1-8b"))
+    eng = InferenceEngine(cfg, max_batch=2, max_len=48, max_events=4)
+    for i in range(3):
+        eng.submit(EngineRequest(rid=i, tokens=list(range(2, 9)),
+                                 prompt_len=7, max_new_tokens=6))
+    eng.run_until_drained()
+    # the ring is bounded even though the run emitted more events
+    assert len(eng.events) <= 4
+    ev = eng.drain_events()
+    assert 0 < len(ev) <= 4
+    assert all(kind in ("prefill", "decode") for kind, _, _ in ev)
+    assert eng.drain_events() == []          # drained means drained
+
+
+@pytest.mark.slow
+def test_chunked_prefill_matches_oneshot():
+    """Greedy continuations must be token-identical whether the prompt
+    was prefetched in one shot or staged through the chunked path
+    (including a final partial chunk)."""
+    cfg = reduce_config(get_config("llama3.1-8b"))
+    one = InferenceEngine(cfg, max_batch=2, max_len=64, seed=5)
+    chk = InferenceEngine(cfg, one.params, max_batch=2, max_len=64,
+                          prefill_chunk=8)
+    assert chk.prefill_chunk == 8
+    rng = np.random.default_rng(1)
+    for rid, n in enumerate((17, 9)):        # 17: ragged final chunk
+        prompt = [int(x) for x in rng.integers(0, cfg.vocab_size, n)]
+        one.submit(EngineRequest(rid=rid, tokens=list(prompt),
+                                 prompt_len=n, max_new_tokens=6))
+        chk.submit(EngineRequest(rid=rid, tokens=list(prompt),
+                                 prompt_len=n, max_new_tokens=6))
+    a = {r.rid: r.generated for r in one.run_until_drained()}
+    b = {r.rid: r.generated for r in chk.run_until_drained()}
+    assert a == b
+
+
+def test_chunked_prefill_gates_off_for_mamba():
+    """Non-resumable mixers must silently keep the one-shot path."""
+    cfg = reduce_config(get_config("mamba2-1.3b"))
+    eng = InferenceEngine(cfg, max_batch=1, max_len=48, prefill_chunk=8)
+    assert eng.prefill_chunk is None
+    eng.submit(EngineRequest(rid=0, tokens=list(range(1, 11)),
+                             prompt_len=10, max_new_tokens=3))
+    assert len(eng.run_until_drained()) == 1
+
+
 def test_paged_cache_allocator():
     cfg = reduce_config(get_config("llama3.1-8b"))
     cache = PagedKVCache(cfg, num_pages=16, page_size=8)

@@ -1,0 +1,189 @@
+"""Latency-profile contract tests: artifact round-trip, interpolation
+semantics (exact at grid nodes, monotone between them, calibrated
+analytic beyond), estimator priors, and deterministic replay with
+profiles driving the simulator for every router."""
+import dataclasses
+
+import pytest
+from conftest import ConstPredictor
+
+from repro.bench.profile import (LatencyProfile, analytic_profile,
+                                 SCHEMA_VERSION)
+from repro.cluster import hardware as hwlib
+from repro.cluster.simulator import Cluster, Instance, Simulator
+from repro.cluster.workload import make_workflow_workload
+from repro.core.controller import (AdmissionController,
+                                   ForecastPoolController)
+from repro.core.metrics import summarize_elastic, summarize_workflows
+from repro.core.router import ALL_BASELINES, GoodServeRouter, make_router
+
+FP = hwlib.footprint("llama3.1-8b")
+HW = hwlib.GPUS["A800"]
+
+ROUTERS = [c.name for c in ALL_BASELINES] + ["goodserve", "oracle"]
+
+
+@pytest.fixture(scope="module")
+def prof():
+    return analytic_profile(HW, FP)
+
+
+# -- artifact -----------------------------------------------------------------
+
+def test_json_round_trip(tmp_path, prof):
+    path = tmp_path / "a800.json"
+    prof.save(path)
+    back = LatencyProfile.load(path)
+    assert back == prof
+    assert back.schema_version == SCHEMA_VERSION
+    # interpolation behavior survives serialization, not just fields
+    assert back.decode_time(3, 777.0) == prof.decode_time(3, 777.0)
+    assert back.prefill_time(300) == prof.prefill_time(300)
+
+
+def test_validation_rejects_malformed():
+    with pytest.raises(ValueError):
+        dataclasses.replace(prof_small(), provenance="vibes")
+    with pytest.raises(ValueError):
+        dataclasses.replace(prof_small(),
+                            decode_batches=(4.0, 2.0))  # not ascending
+    with pytest.raises(ValueError):
+        dataclasses.replace(prof_small(), schema_version=99)
+
+
+def prof_small():
+    return analytic_profile(HW, FP, batches=(2, 4), ctxs=(128.0, 512.0),
+                            chunks=(64, 128))
+
+
+# -- interpolation semantics --------------------------------------------------
+
+def test_exact_at_grid_nodes(prof):
+    for bi, b in enumerate(prof.decode_batches):
+        for ci, c in enumerate(prof.decode_ctxs):
+            assert prof.decode_time(int(b), c) == \
+                pytest.approx(prof.decode_s[bi][ci], rel=1e-12)
+    for ni, n in enumerate(prof.prefill_tokens):
+        assert prof.prefill_time(int(n)) == \
+            pytest.approx(prof.prefill_s[ni], rel=1e-12)
+
+
+def test_monotone_between_monotone_nodes(prof):
+    # the analytic grid is monotone in batch and ctx; bilinear
+    # interpolation must preserve that between nodes
+    prev = 0.0
+    for b in range(1, 33):
+        cur = prof.decode_time(b, 1000.0)
+        assert cur >= prev
+        prev = cur
+    prev = 0.0
+    for c in range(128, 4097, 64):
+        cur = prof.decode_time(8, float(c))
+        assert cur >= prev
+        prev = cur
+
+
+def test_analytic_fallback_beyond_grid(prof):
+    # analytic-provenance profiles have measured == analytic at every
+    # node, so the beyond-grid calibration scale is exactly 1 and the
+    # extrapolation must agree with the hwlib roofline
+    assert prof.decode_time(128, 16384.0) == pytest.approx(
+        hwlib.decode_iteration_time(HW, FP, 128, 16384.0), rel=1e-9)
+    assert prof.prefill_time(65536) == pytest.approx(
+        hwlib.prefill_time(HW, FP, 65536), rel=1e-9)
+
+
+def test_profile_overrides_hwlib_when_supplied(prof):
+    via_hw = hwlib.decode_iteration_time(HW, FP, 4, 600.0, profile=prof)
+    assert via_hw == prof.decode_time(4, 600.0)
+    assert hwlib.prefill_time(HW, FP, 400, profile=prof) == \
+        prof.prefill_time(400)
+
+
+# -- priors -------------------------------------------------------------------
+
+def test_priors_skip_cold_start_exploration(prof):
+    pr = prof.priors()
+    assert pr.n_obs >= GoodServeRouter.min_obs
+    assert pr.p > 0 and pr.d > 0 and pr.q >= 0
+
+
+def test_cluster_seeds_priors_for_every_instance(prof):
+    cluster = Cluster([Instance(0, HW, FP), Instance(1, HW, FP)],
+                      profiles={HW.name: prof})
+    for g in cluster.instances:
+        assert g.profile is prof
+        assert cluster.estimator.snapshot(g.iid).n_obs >= \
+            GoodServeRouter.min_obs
+    # elastically provisioned instances inherit profile AND prior
+    g = cluster.add_instance(HW, FP, t=1.0)
+    assert g.profile is prof
+    assert cluster.estimator.snapshot(g.iid).n_obs >= \
+        GoodServeRouter.min_obs
+
+
+def test_prior_profiles_split_belief_from_truth(prof):
+    stale = analytic_profile(
+        dataclasses.replace(HW, mbu=HW.mbu * 0.5), FP)
+    cluster = Cluster([Instance(0, HW, FP)],
+                      profiles={HW.name: prof},
+                      prior_profiles={HW.name: stale})
+    g = cluster.instances[0]
+    assert g.profile is prof                      # truth: the real profile
+    assert cluster.estimator.snapshot(0).d == \
+        pytest.approx(stale.priors().d)           # belief: the stale one
+
+
+# -- deterministic replay with profiles enabled -------------------------------
+
+def _run_with_profiles(router_name: str, seed: int = 7) -> str:
+    """test_determinism's full-control-plane fingerprint with profiles as
+    the iteration-time truth and prior source on every instance."""
+    reqs, wfs = make_workflow_workload(n_workflows=6, rps=2.0,
+                                       slo_scale=3.0, seed=seed)
+    spot = hwlib.spot_variant(HW, evictions_per_hour=900.0, grace_s=1.5)
+    profiles = {HW.name: analytic_profile(HW, FP),
+                spot.name: analytic_profile(spot, FP)}
+    cluster = Cluster([Instance(0, HW, FP), Instance(1, spot, FP)],
+                      profiles=profiles, seed_priors=True)
+    pred = ConstPredictor(180.0)
+    router = make_router(
+        router_name, predictor=pred if router_name == "goodserve" else None)
+    ctrl = ForecastPoolController(
+        scale_types=("A800",), spot_types=(spot,), max_instances=4,
+        max_spot=2, min_active=2, interval=2.0, hi_load=6.0,
+        lo_pending=1.0, cooldown=2, warmup_override=2.0)
+    adm = AdmissionController(pred, margin=3.0)
+    sim = Simulator(cluster, router, reqs, workflows=wfs, pool=ctrl,
+                    admission=adm, spot_seed=3)
+    out, dur = sim.run()
+    lines = []
+    for sr in out:
+        lines.append(repr((sr.req.rid, sr.state, sr.instance,
+                           sr.tokens_out, sr.n_migrations, sr.preempted,
+                           sr.finished_at, tuple(sr.journey))))
+    lines.append(repr(sim.migration_log))
+    lines.append(repr(sim.eviction_log))
+    lines.append(repr(ctrl.events))
+    lines.append(repr(adm.shed_log))
+    lines.append(repr(sim.plane.decision_log))
+    lines.append(repr(sorted(summarize_elastic(out, dur, cluster).items())))
+    lines.append(repr(sorted(summarize_workflows(out, dur).items())))
+    lines.append(repr([(g.iid, g.hw.name, g.state, g.started_at,
+                        g.retired_at) for g in cluster.instances]))
+    lines.append(repr(dur))
+    return "\n".join(lines)
+
+
+@pytest.mark.parametrize("router_name", ROUTERS)
+def test_profiled_replay_byte_identical(router_name):
+    a = _run_with_profiles(router_name)
+    b = _run_with_profiles(router_name)
+    assert a == b, f"{router_name}: profiled same-seed replay diverged"
+
+
+def test_profiled_replay_differs_from_unprofiled():
+    """Profiles must actually change the trajectory (they are the truth,
+    not a decoration): degrading the profile moves the fingerprint."""
+    base = _run_with_profiles("goodserve")
+    assert _run_with_profiles("goodserve", seed=8) != base
