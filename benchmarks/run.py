@@ -35,7 +35,8 @@ def _suites(fast: bool) -> dict:
                             fig9_migration, fig10_sensitivity,
                             fig11_overhead, fig12_workflows,
                             fig13_autoscale, fig14_spot, fig15_rectify,
-                            fig16_sharded, fig17_calibration, roofline)
+                            fig16_sharded, fig17_calibration,
+                            fig18_fairness, roofline)
 
     n_sim = 200 if fast else 400
     epochs = 12 if fast else 40
@@ -81,6 +82,11 @@ def _suites(fast: bool) -> dict:
         # measures) and only trims the kernel microbench iterations
         "fig17": _Suite(fig17_calibration.run, kw=dict(n=900),
                         fast_kw=dict(fast=True), seedable=True),
+        # fast mode halves the trace; the overload is a RATE (rps is
+        # kept), so the abuser's starvation effect survives the cut —
+        # the in-run retention assertions hold either way
+        "fig18": _Suite(fig18_fairness.run, kw=dict(n=3200),
+                        fast_kw=dict(n=1600), seedable=True),
         "roofline": _Suite(roofline.run),
     }
 

@@ -289,7 +289,7 @@ class Simulator:
                  fail_at: Optional[Dict[int, float]] = None,
                  max_time: float = 86400.0,
                  workflows: Optional[Sequence[Workflow]] = None,
-                 pool=None, admission=None, plane=None,
+                 pool=None, admission=None, fairness=None, plane=None,
                  preemptions: bool = True, spot_seed: int = 0,
                  tick_s: float = 0.25):
         self.cluster = cluster
@@ -301,11 +301,13 @@ class Simulator:
             plane, router = router, None
         if plane is None:
             plane = cplib.ControlPlane(router=router, pool=pool,
-                                       admission=admission)
-        elif router is not None or pool is not None or admission is not None:
+                                       admission=admission,
+                                       fairness=fairness)
+        elif (router is not None or pool is not None
+                or admission is not None or fairness is not None):
             raise TypeError(
                 "pass either a ControlPlane or the legacy "
-                "router/pool/admission pieces, not both")
+                "router/pool/admission/fairness pieces, not both")
         self.plane = plane
         self.requests = [SimRequest(req=r) for r in requests]
         self.tau = tau
@@ -373,6 +375,11 @@ class Simulator:
         if isinstance(d, cplib.Migrate):
             self.migrate(d.sr, d.dst, t, mode=d.mode)
             return None
+        if isinstance(d, cplib.Preempt):
+            if d.sr is None:
+                raise TypeError(f"{d!r} names no request: sr is "
+                                f"required on executed decisions")
+            return self._preempt_queued(d.sr, t)
         if isinstance(d, cplib.Provision):
             return self.provision(d.hw, t, warmup_s=d.warmup_s)
         if isinstance(d, cplib.Drain):
@@ -497,21 +504,46 @@ class Simulator:
             g.retired_at = t
             g.busy = False
 
+    def _preempt_queued(self, sr: SimRequest, t: float) -> bool:
+        """Execute a Preempt: park a QUEUED request by token ID — pull
+        it off its instance's queue (no GPU state; partial chunked
+        prefill is discarded and redone at resubmission) and mark it
+        pending.  Returns whether the victim was actually still queued;
+        the yielding policy owns resubmission.  Running requests refuse:
+        moving live KV is the migration path."""
+        if sr.state != "queued" or sr.instance is None:
+            return False
+        g = self.cluster.instances[sr.instance]
+        if sr not in g.queue:
+            return False
+        g.queue.remove(sr)
+        sr.journey.append((round(t, 2), "park", g.iid))
+        sr.state = "pending"
+        sr.instance = None
+        self._maybe_retire(g.iid, t)
+        return True
+
     def _shed(self, sr: SimRequest, t: float, tag: str = "shed"):
         """Fail the step now, and cascade to every transitive child — a
         workflow missing one step can never meet its deadline, so its
         remaining work is doomed too.  ``tag`` distinguishes admission
-        rejection ("shed") from capacity loss ("lost") in the journey,
-        so metrics don't blame the admission path for dead pools."""
-        stack = [sr]
+        rejection ("shed") from fairness throttling ("throttle") from
+        capacity loss ("lost") in the journey.  Descendants record
+        ``cascade:<tag>`` instead of the root's tag: each cancelled step
+        carries its own tenant/SLO class, and per-class accounting must
+        separate "this step was rejected" from "this step died because
+        an ancestor was"."""
+        ctag = tag if tag.startswith("cascade:") else "cascade:" + tag
+        stack = [(sr, tag)]
         while stack:
-            s = stack.pop()
+            s, tg = stack.pop()
             if s.state in ("done", "failed"):
                 continue
             s.state = "failed"
             self._n_terminal += 1
-            s.journey.append((round(t, 2), tag, -1))
-            stack.extend(self._wf_children.get((s.req.wid, s.req.step), []))
+            s.journey.append((round(t, 2), tg, -1))
+            for c in self._wf_children.get((s.req.wid, s.req.step), []):
+                stack.append((c, ctag))
 
     def _submit(self, sr: SimRequest, t: float):
         """Re-disposition a displaced request (migration target died

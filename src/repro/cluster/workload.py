@@ -69,10 +69,14 @@ class Request:
     output_len: int           # ground truth (hidden from the router)
     arrival: float
     slo: float = 0.0          # absolute E2E deadline duration (seconds)
-    tier: str = ""            # SLO tier ("tight"/"relaxed") when the
-                              # workload draws per-request slack ranges —
-                              # lets spot benchmarks attribute violations
+    tier: str = ""            # SLO tier ("tight"/"relaxed" for tuple
+                              # slo_scale, "uniform" for the scalar setup)
+                              # — lets benchmarks attribute violations
     prefix_group: int = 0     # shared-prompt-prefix group (for prefix cache)
+    # -- multi-tenant identity (client-declared, proxy-visible) --
+    tenant: int = -1          # tenant id (-1 = anonymous single-tenant)
+    slo_class: str = ""       # "interactive" | "standard" | "best_effort"
+                              # ("" = unclassed: fairness-neutral)
     # -- agentic-workflow structure (visible to routers; lengths are not) --
     wid: int = -1             # workflow id (-1 = standalone request)
     step: int = 0             # step index within the workflow DAG
@@ -246,6 +250,7 @@ def make_workload(n: int = 600, rps: float = 10.0, slo_scale=2.0,
                       else "relaxed")
         else:
             scale = slo_scale
+            r.tier = "uniform"
         r.slo = solo_latency(ref, fp, r) * scale
     return reqs
 
@@ -402,3 +407,110 @@ def make_workflow_workload(n_workflows: int = 80, rps: float = 2.0,
         workflows.append(wf)
         requests.extend(wf.steps)
     return requests, workflows
+
+
+# ---------------------------------------------------------------------------
+# Multi-tenant identity (FairServe-style skewed demand, AccelGen-style
+# heterogeneous per-class SLO guarantees)
+# ---------------------------------------------------------------------------
+
+SLO_CLASSES = ("interactive", "standard", "best_effort")
+
+
+@dataclasses.dataclass(frozen=True)
+class TenantSpec:
+    """How to paint an existing workload with tenant identities.
+
+    Tagging is post-hoc with its OWN rng stream, so a workload generated
+    from a given seed is byte-identical with or without tenants attached
+    — the base draws are untouched and replay fingerprints stay stable.
+    """
+    n_tenants: int = 12
+    zipf_a: float = 1.1            # demand skew across non-abuser tenants
+    abuser: int = -1               # tenant id flooding the pool (-1: none)
+    abuser_share: float = 0.5      # fraction of traffic the abuser owns
+    abuser_class: str = "best_effort"
+    # per-tenant SLO-class assignment weights (each tenant carries ONE class)
+    class_mix: Tuple[Tuple[str, float], ...] = (
+        ("interactive", 0.40), ("standard", 0.35), ("best_effort", 0.25))
+    # per-class SLO relaxation on top of the base slo_scale: interactive
+    # keeps the tight budget, best-effort tolerates a loose one
+    class_slo_scale: Tuple[Tuple[str, float], ...] = (
+        ("interactive", 1.0), ("standard", 1.3), ("best_effort", 2.0))
+
+
+def _tenant_weights(spec: "TenantSpec") -> np.ndarray:
+    ids = np.arange(spec.n_tenants, dtype=float)
+    w = 1.0 / (ids + 1.0) ** spec.zipf_a
+    if 0 <= spec.abuser < spec.n_tenants:
+        w[spec.abuser] = 0.0
+        w *= (1.0 - spec.abuser_share) / w.sum()
+        w[spec.abuser] = spec.abuser_share
+    else:
+        w /= w.sum()
+    return w
+
+
+def assign_tenants(requests: List[Request], spec: TenantSpec, seed: int = 0,
+                   workflows: Optional[List["Workflow"]] = None
+                   ) -> List[Request]:
+    """Tag ``requests`` in place with tenant ids and SLO classes.
+
+    The tagging unit is a whole workflow when ``workflows`` is given
+    (one tenant owns a DAG session end to end) and a single request
+    otherwise.  Demand across tenants is Zipf-skewed; when
+    ``spec.abuser >= 0`` that tenant's draw probability is pinned to
+    ``abuser_share`` and the rest split the remainder Zipf-style.  Each
+    tenant carries exactly one SLO class, whose relaxation factor
+    multiplies the request SLO (and the workflow deadline), so classes
+    carry genuinely heterogeneous guarantees.  Returns ``requests``.
+    """
+    rng = np.random.default_rng(seed)
+    w = _tenant_weights(spec)
+    names = [c for c, _ in spec.class_mix]
+    mix = np.array([p for _, p in spec.class_mix], float)
+    mix /= mix.sum()
+    classes = {tn: names[int(rng.choice(len(names), p=mix))]
+               for tn in range(spec.n_tenants)}
+    if 0 <= spec.abuser < spec.n_tenants:
+        classes[spec.abuser] = spec.abuser_class
+    relax = dict(spec.class_slo_scale)
+
+    def _draw():
+        tn = int(rng.choice(spec.n_tenants, p=w))
+        cls = classes[tn]
+        return tn, cls, float(relax.get(cls, 1.0))
+
+    tagged_ids = set()
+    if workflows:
+        for wf in workflows:
+            tn, cls, m = _draw()
+            wf.deadline *= m
+            for s in wf.steps:
+                s.tenant, s.slo_class = tn, cls
+                s.slo = wf.deadline
+                s.deadline_t = wf.arrival + wf.deadline
+                tagged_ids.add(id(s))
+    for r in requests:
+        if id(r) in tagged_ids:
+            continue
+        tn, cls, m = _draw()
+        r.tenant, r.slo_class = tn, cls
+        r.slo *= m
+        if r.deadline_t is not None:
+            r.deadline_t = r.arrival + r.slo
+    return requests
+
+
+def drop_tenant(requests: List[Request], tenant: int,
+                workflows: Optional[List["Workflow"]] = None):
+    """Remove one tenant's traffic, leaving everyone else's arrivals
+    untouched — the counterfactual "no abuser" arm of a fairness run.
+    Returns the filtered request list, or ``(requests, workflows)`` when
+    workflows are given."""
+    reqs = [r for r in requests if r.tenant != tenant]
+    if workflows is None:
+        return reqs
+    wfs = [wf for wf in workflows
+           if not (wf.steps and wf.steps[0].tenant == tenant)]
+    return reqs, wfs

@@ -88,7 +88,10 @@ class Route(Decision):
 class Shed(Decision):
     """Fail the request now (cascades to workflow descendants).  The
     reason becomes the journey tag: "shed" = admission rejection,
-    "lost" = no capacity left to serve it."""
+    "throttle" = fairness-gate rejection, "lost" = no capacity left to
+    serve it.  Cascaded descendants record ``cascade:<reason>`` so
+    per-class accounting can attribute each cancelled step to its OWN
+    SLO class."""
     reason: str = "shed"
     sr: object = None
 
@@ -105,6 +108,22 @@ class Park(Decision):
 
     def __repr__(self):
         return f"Park(rid={_rid(self.sr)})"
+
+
+@dataclasses.dataclass(frozen=True, repr=False)
+class Preempt(Decision):
+    """Park a QUEUED request by token ID: pull it off its instance's
+    queue (it holds no GPU state — any partial chunked prefill is
+    discarded and redone on resubmission) and mark it pending again.
+    The yielding policy receives True/False for whether the victim was
+    actually still queued, and OWNS resubmission — typically a later
+    ``Route`` from ``on_tick`` once pressure drops.  Running requests
+    are not preemptable this way; moving live KV is what ``Migrate``
+    is for."""
+    sr: object = None
+
+    def __repr__(self):
+        return f"Preempt(rid={_rid(self.sr)})"
 
 
 @dataclasses.dataclass(frozen=True, repr=False)
@@ -331,12 +350,17 @@ class ControlPlane:
     simulator's constructor shim.
     """
 
-    def __init__(self, router, pool=None, admission=None, beliefs=None):
+    def __init__(self, router, pool=None, admission=None, beliefs=None,
+                 fairness=None):
         if router is None:
             raise ValueError("a ControlPlane needs a router policy")
         self.router = router
         self.pool = pool
         self.admission = admission
+        # multi-tenant fairness policy: consulted as a gate after
+        # admission (Shed("throttle")/Shed("shed") on rejection) and
+        # hosted as a normal Policy for its tick/completion hooks
+        self.fairness = fairness
         # the plane's canonical beliefs; legacy-constructed policies
         # may carry private bundles, collected at attach for feedback
         self.beliefs = (beliefs
@@ -356,7 +380,8 @@ class ControlPlane:
     # -- wiring --------------------------------------------------------------
 
     def _policies(self):
-        return [p for p in (self.router, self.pool, self.admission)
+        return [p for p in (self.router, self.pool, self.admission,
+                            self.fairness)
                 if p is not None]
 
     def attach(self, sim):
@@ -486,6 +511,12 @@ class ControlPlane:
             d = Shed("shed", sr=sr)
             self.decision_log.append(d)
             return d
+        if self.fairness is not None:
+            why = self.fairness.gate(sr, t)
+            if why is not None:
+                d = Shed(why, sr=sr)
+                self.decision_log.append(d)
+                return d
         return self.disposition(sr, t)
 
     def on_step_done(self, sr, t: float) -> Iterator[Decision]:

@@ -149,21 +149,37 @@ def preemption_violations(finished) -> int:
                     or (r.finished_at - r.req.arrival) > r.req.slo))
 
 
+def shed_kind(r):
+    """How a failed request left the system: "shed" (admission
+    rejection), "throttle" (fairness gate), "lost" (capacity died), or
+    None (never tagged).  Workflow descendants cancelled by an
+    ancestor's rejection carry ``cascade:<tag>`` journey tags and are
+    attributed to the same kind — the cascade prefix exists so
+    *per-class* accounting can tell a step's own rejection from
+    collateral damage, not to hide the root cause here."""
+    for _t, ev, _gid in r.journey:
+        tag = ev[8:] if ev.startswith("cascade:") else ev
+        if tag in ("shed", "throttle", "lost"):
+            return tag
+    return None
+
+
 def summarize_elastic(finished, duration: float, cluster) -> dict:
     """Request-level summary extended with pool-cost accounting and
     spot-preemption attribution."""
     s = summarize(finished, duration)
     states = [g.state for g in cluster.instances]
+    kinds = [shed_kind(r) for r in finished if r.state == "failed"]
     s.update({
         "cost_usd": cluster_cost_usd(cluster, duration),
         "spot_cost_usd": spot_cost_usd(cluster, duration),
         "goodput_per_usd": goodput_per_dollar(finished, duration, cluster),
-        # "shed" = the AdmissionController rejected it; "lost" = the
-        # pool's capacity died under it (eviction/failure, no survivor)
-        "n_shed": sum(1 for r in finished if r.state == "failed"
-                      and any(e[1] == "shed" for e in r.journey)),
-        "n_lost": sum(1 for r in finished if r.state == "failed"
-                      and not any(e[1] == "shed" for e in r.journey)),
+        # "shed" = the AdmissionController rejected it; "throttled" =
+        # the fairness gate rejected it; "lost" = the pool's capacity
+        # died under it (eviction/failure, no survivor)
+        "n_shed": sum(1 for k in kinds if k == "shed"),
+        "n_throttled": sum(1 for k in kinds if k == "throttle"),
+        "n_lost": sum(1 for k in kinds if k not in ("shed", "throttle")),
         "n_instances_total": len(states),
         "n_retired": sum(1 for st in states
                          if st in ("retired", "failed", "evicted")),
@@ -174,6 +190,67 @@ def summarize_elastic(finished, duration: float, cluster) -> dict:
         "pred_mae_tokens": prediction_mae_tokens(finished),
     })
     return s
+
+
+# ---------------------------------------------------------------------------
+# Multi-tenant / SLO-class accounting
+# ---------------------------------------------------------------------------
+
+def _cell():
+    return {"n": 0, "good": 0, "violations": 0, "shed": 0,
+            "throttled": 0, "lost": 0, "cascaded": 0}
+
+
+def _tally(cell, r):
+    cell["n"] += 1
+    if (r.finished_at is not None
+            and (r.finished_at - r.req.arrival) <= r.req.slo):
+        cell["good"] += 1
+    else:
+        cell["violations"] += 1
+    if r.state == "failed":
+        cascaded = any(ev.startswith("cascade:") for _t, ev, _g in r.journey)
+        if cascaded:
+            cell["cascaded"] += 1
+        kind = shed_kind(r)
+        if kind == "shed":
+            cell["shed"] += 1
+        elif kind == "throttle":
+            cell["throttled"] += 1
+        else:
+            cell["lost"] += 1
+
+
+def per_class_breakdown(finished, total_duration: float) -> dict:
+    """slo_class -> outcome accounting, each request attributed to its
+    OWN class (cascade journey tags keep collateral cancellations from
+    being blamed on the root's class).  Unclassed requests group under
+    "".  ``goodput_rps`` per class shares the run's duration so class
+    rows are comparable to the aggregate."""
+    out: Dict[str, dict] = {}
+    for r in finished:
+        _tally(out.setdefault(r.req.slo_class, _cell()), r)
+    for cell in out.values():
+        cell["goodput_rps"] = cell["good"] / max(total_duration, 1e-9)
+    return dict(sorted(out.items()))
+
+
+def per_tenant_breakdown(finished, total_duration: float) -> dict:
+    """tenant id -> the same outcome accounting, plus the tokens the
+    pool actually processed for the tenant (prompt + generated of every
+    request that produced output) — the service measure a fairness
+    scheduler's ledger must conserve.  Anonymous traffic is tenant -1."""
+    out: Dict[int, dict] = {}
+    for r in finished:
+        cell = out.setdefault(r.req.tenant, _cell())
+        _tally(cell, r)
+        if r.state == "done":
+            cell["served_tokens"] = (cell.get("served_tokens", 0)
+                                     + r.req.input_len + r.tokens_out)
+    for cell in out.values():
+        cell.setdefault("served_tokens", 0)
+        cell["goodput_rps"] = cell["good"] / max(total_duration, 1e-9)
+    return dict(sorted(out.items()))
 
 
 # ---------------------------------------------------------------------------

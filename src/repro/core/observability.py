@@ -113,6 +113,19 @@ class InstanceView:
         """Prompt + streamed tokens, per running request."""
         return tuple(r.context_len for r in self._inst.running)
 
+    @cached_property
+    def tenant_tokens(self) -> tuple:
+        """(tenant, slo_class, context tokens) per resident request —
+        queued then running.  Tenant id and SLO class are client-declared
+        at admission, so the proxy knows them for every request it
+        routed; token counts are the same proxy-side accounting as
+        ``queued_prefill_tokens`` / ``running_context_lens``.  This is
+        ALL a fairness scheduler may see about a tenant."""
+        return (tuple((s.req.tenant, s.req.slo_class, s.prefill_len)
+                      for s in self._inst.queue)
+                + tuple((r.req.tenant, r.req.slo_class, r.context_len)
+                        for r in self._inst.running))
+
     # -- cache probes (hit lengths only, like a prefix-table RPC) ---------
 
     def prefix_hit(self, req) -> int:
@@ -149,14 +162,16 @@ class InstanceView:
         handles intentionally stay live — they model RPCs the replica
         issues at decision time, not replicated view state."""
         _ = (self.tpm, self.mem_used_frac, self.queued_ages,
-             self.queued_prefill_tokens, self.running_context_lens)
+             self.queued_prefill_tokens, self.running_context_lens,
+             self.tenant_tokens)
         return self
 
 
 # The lazy vectors a freeze() must have materialized (and exactly the
 # set InstanceView defines as cached properties — pinned by test).
 FROZEN_SIGNALS = ("tpm", "mem_used_frac", "queued_ages",
-                  "queued_prefill_tokens", "running_context_lens")
+                  "queued_prefill_tokens", "running_context_lens",
+                  "tenant_tokens")
 
 
 def capture_instance(cluster, g, t: float) -> InstanceView:
@@ -269,3 +284,23 @@ class ClusterView:
 
     def total_pending(self) -> int:
         return sum(v.pending for v in self.accepting())
+
+    def tenant_resident_tokens(self) -> dict:
+        """Context tokens resident per tenant (queued prefill + running
+        context), summed over every instance in the snapshot and keyed
+        by tenant id in sorted order — the cluster-wide per-tenant
+        accounting a fairness scheduler meters against.  Anonymous
+        traffic shows up under tenant -1."""
+        out: dict = {}
+        for v in self.instances:
+            for tenant, _cls, toks in v.tenant_tokens:
+                out[tenant] = out.get(tenant, 0) + int(toks)
+        return dict(sorted(out.items()))
+
+    def class_resident_tokens(self) -> dict:
+        """Same accounting keyed by SLO class (sorted)."""
+        out: dict = {}
+        for v in self.instances:
+            for _tenant, cls, toks in v.tenant_tokens:
+                out[cls] = out.get(cls, 0) + int(toks)
+        return dict(sorted(out.items()))

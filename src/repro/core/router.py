@@ -212,8 +212,16 @@ class GoodServeRouter(Router):
                  enable_migration: bool = True,
                  migration_mode: str = "token_id", margin: float = 0.7,
                  spot_aware: bool = True, rectifier=None, evict_rates=None,
-                 beliefs: Beliefs = None):
+                 beliefs: Beliefs = None, class_slack=None):
         super().__init__(seed)
+        # SLO-class-aware slack: the effective slack each class budgets
+        # against is scaled per class — interactive (< 1) routes
+        # conservatively, best-effort (> 1) may ride slower or queued
+        # capacity.  Unclassed requests ("") fall through to 1.0, so a
+        # class-free workload routes byte-identically to the class-blind
+        # router (x1.0 is a float identity).
+        self.class_slack = dict({"interactive": 0.85, "best_effort": 1.25}
+                                if class_slack is None else class_slack)
         # estimation state lives in ONE Beliefs bundle — pass a shared
         # instance (new style: the same object the plane and the
         # admission path hold) or the legacy predictor/rectifier/
@@ -416,7 +424,8 @@ class GoodServeRouter(Router):
             self._rr_cold += 1
             return cold[self._rr_cold % len(cold)]
         T, d = self._latencies(sr, views, sr.pred_out, sr.req.input_len, t)
-        slack = sr.deadline - t
+        slack = (sr.deadline - t) * self.class_slack.get(sr.req.slo_class,
+                                                         1.0)
         # remaining workflow work after this step: assume downstream steps
         # are predictor-sized decodes (their prefills mostly hit the
         # session cache under affinity routing); each is sized by the
@@ -480,7 +489,8 @@ class GoodServeRouter(Router):
         # workflow slack: this step's remaining decode plus the estimated
         # downstream steps must all fit before the workflow deadline
         finish_here = d_here * (remaining + down * unit)
-        slack = sr.deadline - t
+        slack = (sr.deadline - t) * self.class_slack.get(sr.req.slo_class,
+                                                         1.0)
         if finish_here <= slack:
             return
         # current instance will violate: find a stronger feasible target,

@@ -14,12 +14,15 @@ from conftest import ConstPredictor
 
 from repro.cluster import hardware as hwlib
 from repro.cluster.simulator import Cluster, Instance, Simulator
-from repro.cluster.workload import make_workflow_workload
+from repro.cluster.workload import (TenantSpec, assign_tenants,
+                                    make_workflow_workload)
 from repro.core.controller import (AdmissionController,
                                    ForecastPoolController,
                                    ReactivePoolController)
 from repro.core.control_plane import ControlPlane
-from repro.core.metrics import summarize_elastic, summarize_workflows
+from repro.core.fairness import FairnessPolicy
+from repro.core.metrics import (per_class_breakdown, per_tenant_breakdown,
+                                summarize_elastic, summarize_workflows)
 from repro.core.rectify import EvictionRateEstimator, OnlineSurvival
 from repro.core.router import ALL_BASELINES, make_router
 from repro.core.sharded_plane import make_sharded_plane
@@ -191,6 +194,92 @@ def test_sharded_same_seed_replays_byte_identical(router_name):
     b = _run_sharded(router_name)
     assert a == b, (f"{router_name}: sharded same-seed replay diverged "
                     f"(N=2 replicas, 0.5s staleness)")
+
+
+def _tenant_workload(seed: int):
+    """The workflow workload with tenants painted on: one abusive tenant
+    at half the traffic, aggressive fairness knobs so the throttle,
+    class-shed, and preempt/park/release paths all actually fire inside
+    the fingerprinted run."""
+    reqs, wfs = make_workflow_workload(n_workflows=6, rps=2.0,
+                                       slo_scale=3.0, seed=seed)
+    spec = TenantSpec(n_tenants=4, abuser=0, abuser_share=0.5)
+    assign_tenants(reqs, spec, seed=seed + 100, workflows=wfs)
+    return reqs, wfs
+
+
+def _fairness():
+    return FairnessPolicy(quantum_tps=600.0, burst_s=1.0,
+                          overload_pending=1.0,
+                          class_shed={"best_effort": 6.0, "standard": 12.0},
+                          park_timeout_s=2.0, release_pending=1.0)
+
+
+def _run_fair(router_name: str, seed: int = 7, n_shards: int = 0) -> str:
+    """Fingerprint with tenants + the fairness policy attached — the
+    DRR ledger, throttle/shed/preempt/release logs, and per-tenant /
+    per-class metric rows all join the replay contract (sharded N=2
+    variant included via ``n_shards``)."""
+    reqs, wfs = _tenant_workload(seed)
+    cluster = Cluster([Instance(0, hwlib.GPUS["A800"], FP),
+                       Instance(1, _spot_a800(), FP)])
+
+    def replica(_i=0):
+        pred = ConstPredictor(180.0)
+        router = make_router(
+            router_name,
+            predictor=pred if router_name == "goodserve" else None)
+        return ControlPlane(router=router, pool=_controller("forecast"),
+                            admission=AdmissionController(pred, margin=3.0),
+                            fairness=_fairness())
+
+    if n_shards:
+        plane = make_sharded_plane(n_shards, replica, sync_interval_s=0.5)
+    else:
+        plane = replica()
+    sim = Simulator(cluster, plane, reqs, workflows=wfs, spot_seed=3)
+    out, dur = sim.run()
+    lines = []
+    for sr in out:
+        lines.append(repr((sr.req.rid, sr.req.tenant, sr.req.slo_class,
+                           sr.state, sr.instance, sr.tokens_out,
+                           sr.n_migrations, sr.preempted, sr.finished_at,
+                           tuple(sr.journey))))
+    lines.append(repr(sim.migration_log))
+    lines.append(repr(sim.eviction_log))
+    lines.append(repr(sim.plane.decision_log))
+    fairs = ([s.replica.fairness for s in sim.plane.shards] if n_shards
+             else [sim.plane.fairness])
+    for f in fairs:
+        lines.append(repr(sorted(f.ledger().items())))
+    lines.append(repr(sorted(summarize_elastic(out, dur, cluster).items())))
+    lines.append(repr(sorted(per_class_breakdown(out, dur).items())))
+    lines.append(repr(sorted(per_tenant_breakdown(out, dur).items())))
+    lines.append(repr(dur))
+    return "\n".join(lines)
+
+
+@pytest.mark.parametrize("router_name", ROUTERS)
+def test_fairness_plane_replays_byte_identical(router_name):
+    a = _run_fair(router_name)
+    b = _run_fair(router_name)
+    assert a == b, (f"{router_name}: same-seed replay diverged with "
+                    f"tenants + fairness attached")
+
+
+@pytest.mark.parametrize("router_name", ["goodserve", "least_request"])
+def test_sharded_fairness_plane_replays_byte_identical(router_name):
+    a = _run_fair(router_name, n_shards=2)
+    b = _run_fair(router_name, n_shards=2)
+    assert a == b, (f"{router_name}: sharded (N=2) same-seed replay "
+                    f"diverged with tenants + fairness attached")
+
+
+def test_fairness_fingerprint_has_discriminating_power():
+    log = _run_fair("goodserve")
+    assert _run_fair("goodserve", seed=8) != log
+    # tenants actually flowed into the fingerprint
+    assert "'best_effort'" in log or "'interactive'" in log
 
 
 def test_sharded_replay_has_discriminating_power():

@@ -25,7 +25,8 @@ _SRC = os.path.join(os.path.dirname(__file__), "..", "src", "repro")
 @pytest.mark.parametrize("module", ["core/router.py", "core/controller.py",
                                     "core/control_plane.py",
                                     "core/sharded_plane.py",
-                                    "core/migration.py", "core/rectify.py"])
+                                    "core/migration.py", "core/rectify.py",
+                                    "core/fairness.py"])
 def test_no_instance_internals_in_proxy_code(module):
     """Routers, pool/admission controllers, the migration/evacuation
     cost models, and the rectify estimators observe the cluster ONLY
@@ -48,19 +49,39 @@ def test_no_instance_internals_in_proxy_code(module):
 def test_simulator_is_facade_only():
     """The simulator talks to ONE policy object — the ControlPlane —
     and merely executes the Decisions it returns.  It must name no
-    concrete policy class and hold no router/pool/admission attribute
-    (the constructor shim maps legacy kwargs onto a plane and forgets
-    them), so new scenarios extend the plane, not the simulator."""
+    concrete policy class and hold no router/pool/admission/fairness
+    attribute (the constructor shim maps legacy kwargs onto a plane and
+    forgets them), so new scenarios extend the plane, not the
+    simulator."""
     src = open(os.path.join(_SRC, "cluster", "simulator.py")).read()
     for pattern in (r"self\.router\b", r"self\.pool\b",
-                    r"self\.admission\b",
+                    r"self\.admission\b", r"self\.fairness\b",
                     r"from repro\.core\.router", r"from repro\.core\.controller",
+                    r"from repro\.core\.fairness",
                     r"\bmake_router\b", r"\bGoodServe",
                     r"\bPoolController\b", r"\bAdmissionController\b",
-                    r"\bReactivePool", r"\bForecastPool"):
+                    r"\bReactivePool", r"\bForecastPool",
+                    r"\bFairnessPolicy\b"):
         hits = [ln for ln in src.splitlines() if re.search(pattern, ln)]
         assert not hits, \
             f"simulator.py bypasses the ControlPlane facade: {hits}"
+
+
+def test_fairness_module_reads_no_oracle_tenant_fields():
+    """The fairness scheduler meters tenants from what the PROXY knows:
+    client-declared tenant/class tags and its own token accounting.
+    The workload generator's demand model (Zipf skew, who the abuser
+    is, the tenant spec) and ground-truth output lengths are simulator
+    oracle state — a scheduler peeking at them would be fitting the
+    synthetic demand generator, not scheduling.  (output_len can't join
+    the shared pattern list above: the OracleRouter reads it by
+    design.)"""
+    src = open(os.path.join(_SRC, "core", "fairness.py")).read()
+    for pattern in (r"\.output_len\b", r"\babuser\b", r"\bTenantSpec\b",
+                    r"zipf", r"repro\.cluster\.workload"):
+        hits = [ln for ln in src.splitlines()
+                if re.search(pattern, ln, re.IGNORECASE)]
+        assert not hits, f"fairness.py peeks at oracle state: {hits}"
 
 
 def test_all_routers_still_route_via_views():
