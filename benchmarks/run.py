@@ -36,7 +36,7 @@ def _suites(fast: bool) -> dict:
                             fig11_overhead, fig12_workflows,
                             fig13_autoscale, fig14_spot, fig15_rectify,
                             fig16_sharded, fig17_calibration,
-                            fig18_fairness, roofline)
+                            fig18_fairness, fig19_disagg, roofline)
 
     n_sim = 200 if fast else 400
     epochs = 12 if fast else 40
@@ -87,6 +87,12 @@ def _suites(fast: bool) -> dict:
         # the in-run retention assertions hold either way
         "fig18": _Suite(fig18_fairness.run, kw=dict(n=3200),
                         fast_kw=dict(n=1600), seedable=True),
+        # fast mode cuts the trace to a third; the colocated arm's
+        # chunked-prefill interference and the naive arm's WAN handoffs
+        # are per-request effects, so the margins survive the cut (the
+        # in-run gp/$ and WAN-penalty assertions hold either way)
+        "fig19": _Suite(fig19_disagg.run, kw=dict(n=1500),
+                        fast_kw=dict(n=500), seedable=True),
         "roofline": _Suite(roofline.run),
     }
 

@@ -41,6 +41,11 @@ class HardwareSpec:
     evictions_per_hour: float = 0.0  # Poisson rate of eviction notices
                                      # while the instance is up
     grace_s: float = 0.0         # notice -> kill window (evacuation time)
+    # -- placement ------------------------------------------------------
+    region: str = ""             # geographic region ("" = unplaced; an
+                                 # Instance may override per-replica).
+                                 # Pairs of regions resolve to a network
+                                 # tier via migration.Topology.
 
     @property
     def eff_flops(self) -> float:

@@ -71,6 +71,7 @@ class SimRequest:
     prefill_end: Optional[float] = None
     finished_at: Optional[float] = None
     n_migrations: int = 0
+    n_handoffs: int = 0         # prefill->decode transfers (role pools)
     preempted: bool = False     # touched by a spot eviction at least once
     iters_since_check: int = 0
     pred_out: float = 0.0       # router's current output-length belief
@@ -107,10 +108,21 @@ class Instance:
     def __init__(self, iid: int, hw: hwlib.HardwareSpec,
                  fp: hwlib.ModelFootprint, prefix_capacity: int = 8,
                  session_capacity: int = 16, state: str = "active",
-                 started_at: float = 0.0, profile=None):
+                 started_at: float = 0.0, profile=None,
+                 region: Optional[str] = None, role: str = "both"):
         self.iid = iid
         self.hw = hw
         self.fp = fp
+        # placement: the geographic region (defaults to the hardware
+        # catalog entry's) and the serving role.  A "prefill" instance
+        # hands finished prefills off to a decode-capable target (the
+        # plane's Handoff decision); "both" is the classic colocated
+        # instance and the default everywhere, so flat pools behave
+        # exactly as before.
+        self.region = hw.region if region is None else region
+        if role not in ("prefill", "decode", "both"):
+            raise ValueError(f"unknown role {role!r}")
+        self.role = role
         # measured LatencyProfile governing this instance's iteration
         # times (None -> analytic roofline, the pre-calibration model)
         self.profile = profile
@@ -218,9 +230,16 @@ class Cluster:
     def __init__(self, instances: Sequence[Instance],
                  net: miglib.NetworkSpec = miglib.ETHERNET_10G,
                  ema_alpha: float = 0.3, profiles=None,
-                 seed_priors: bool = True, prior_profiles=None):
+                 seed_priors: bool = True, prior_profiles=None,
+                 topology: Optional[miglib.Topology] = None):
         self.instances = list(instances)
         self.net = net
+        # network tiers: instance pairs resolve through the topology.
+        # Without one, every pair prices the legacy flat ``net`` — the
+        # degenerate single-tier topology, byte-identical to pre-region
+        # clusters.
+        self.topology = (topology if topology is not None
+                         else miglib.flat_topology(net))
         self.estimator = EMAEstimator(alpha=ema_alpha)
         # calibration: hardware-name -> LatencyProfile.  Every instance
         # of that hardware (present AND elastically provisioned later)
@@ -254,6 +273,12 @@ class Cluster:
 
     def next_view_version(self) -> int:
         return next(self._view_seq)
+
+    def link(self, src_iid: int, dst_iid: int) -> miglib.NetworkSpec:
+        """The network tier connecting two instances — what every
+        migration, evacuation, and handoff between them is priced on."""
+        return self.topology.tier(self.instances[src_iid].region,
+                                  self.instances[dst_iid].region)
 
     def alive(self) -> List[Instance]:
         return [g for g in self.instances if g.alive]
@@ -330,6 +355,8 @@ class Simulator:
         # request's state after every event
         self._n_terminal = 0
         self.migration_log: List[Tuple[float, int, int, float]] = []
+        # prefill->decode transfers: (t, src, dst, mode, latency)
+        self.handoff_log: List[Tuple[float, int, int, str, float]] = []
         # spot preemption injection: while a spot instance is up, eviction
         # notices arrive as a Poisson process (hw.evictions_per_hour).
         # Draws come from a per-instance stream seeded by (spot_seed,
@@ -374,6 +401,12 @@ class Simulator:
             return d.gid
         if isinstance(d, cplib.Migrate):
             self.migrate(d.sr, d.dst, t, mode=d.mode)
+            return None
+        if isinstance(d, cplib.Handoff):
+            if d.sr is None:
+                raise TypeError(f"{d!r} names no request: sr is "
+                                f"required on executed decisions")
+            self.migrate(d.sr, d.dst, t, mode=d.mode, kind="handoff")
             return None
         if isinstance(d, cplib.Preempt):
             if d.sr is None:
@@ -432,8 +465,14 @@ class Simulator:
             g.busy = True
             self._push(t, "step", gid)
 
-    def migrate(self, sr: SimRequest, dst: int, t: float, mode: str):
-        """Move a running/queued request to another instance."""
+    def migrate(self, sr: SimRequest, dst: int, t: float, mode: str,
+                kind: str = "migrate"):
+        """Move a running/queued request to another instance.  The
+        transfer is priced on the network tier the topology resolves for
+        this instance pair — an inter-region move pays the WAN tier.
+        ``kind="handoff"`` is the prefill→decode transfer in role-split
+        pools: same machinery, but accounted separately (it is planned
+        capacity steering, not a rescue)."""
         src = self.cluster.instances[sr.instance]
         if sr in src.running:
             src.running.remove(sr)
@@ -442,17 +481,21 @@ class Simulator:
         else:
             return
         sr.state = "migrating"
-        sr.n_migrations += 1
+        net = self.cluster.link(src.iid, dst)
         fp = src.fp
         if mode == "kv":
-            lat = miglib.kv_transfer_latency(self.cluster.net, fp,
-                                             sr.context_len)
+            lat = miglib.kv_transfer_latency(net, fp, sr.context_len)
             skip = True
         else:
-            lat = miglib.token_id_transfer_latency(self.cluster.net,
-                                                   sr.context_len)
+            lat = miglib.token_id_transfer_latency(net, sr.context_len)
             skip = False  # re-prefill happens at the target queue
-        self.migration_log.append((t, sr.instance, dst, lat))
+        if kind == "handoff":
+            sr.n_handoffs += 1
+            sr.journey.append((round(t, 2), "handoff", dst))
+            self.handoff_log.append((t, src.iid, dst, mode, lat))
+        else:
+            sr.n_migrations += 1
+            self.migration_log.append((t, src.iid, dst, lat))
         self._push(t + lat, "migrate_arrive", (sr, dst, skip))
         self._maybe_retire(src.iid, t)
 
@@ -542,6 +585,11 @@ class Simulator:
             s.state = "failed"
             self._n_terminal += 1
             s.journey.append((round(t, 2), tg, -1))
+            # terminal-failure notification: this is the ONLY site that
+            # fails requests, so policies holding per-request ledger
+            # state (fairness admission debits) settle here — a shed or
+            # lost request never reaches on_request_done
+            self.plane.on_request_failed(s, t)
             for c in self._wf_children.get((s.req.wid, s.req.step), []):
                 stack.append((c, ctag))
 
@@ -638,6 +686,7 @@ class Simulator:
         t_next = t + dt
 
         # --- prefill progress ---------------------------------------------
+        handoff_pf = None
         if pf is not None:
             pf.prefill_progress += chunk_tokens
             finished_pf = (pf.skip_prefill
@@ -655,6 +704,14 @@ class Simulator:
                 pf.prefill_end = t_next
                 pf.journey.append((round(t_next, 2), "run", gid))
                 g.running.append(pf)
+                # role-split pools: a prefill-role instance reports the
+                # finished prefill so the plane can hand decoding to a
+                # decode-capable target.  Fired after the decode block
+                # below, once this iteration's batch bookkeeping is done
+                # (never fires for "both"/"decode" roles, so flat pools
+                # replay byte-identically).
+                if g.role == "prefill":
+                    handoff_pf = pf
 
         # --- decode progress -----------------------------------------------
         if b:
@@ -689,6 +746,10 @@ class Simulator:
                 self._release_children(sr, t_next)
             for sr in at_risk:
                 self._drive(self.plane.on_step_done(sr, t_next), t_next)
+
+        if handoff_pf is not None and handoff_pf.state == "running":
+            self._drive(self.plane.on_prefill_done(handoff_pf, t_next),
+                        t_next)
 
         if g.running or g.queue:
             self._push(t_next, "step", gid)
@@ -783,7 +844,8 @@ class Simulator:
             sr.journey.append((round(t, 2), "evict", gid))
             dst = self.plane.route(sr, t)
             mode = miglib.plan_evacuation(
-                self.cluster.net, self.cluster.instances[dst].hw, g.fp,
+                self.cluster.link(gid, dst),
+                self.cluster.instances[dst].hw, g.fp,
                 sr.context_len, g.eviction_deadline - t,
                 prefix_hit=self.cluster.instances[dst].prefix_hit(sr.req))
             self.migrate(sr, dst, t, mode=mode)

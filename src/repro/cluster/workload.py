@@ -77,6 +77,9 @@ class Request:
     tenant: int = -1          # tenant id (-1 = anonymous single-tenant)
     slo_class: str = ""       # "interactive" | "standard" | "best_effort"
                               # ("" = unclassed: fairness-neutral)
+    region: str = ""          # origin region of the arrival ("" = no
+                              # geographic affinity) — region-aware
+                              # routers prefer serving near the client
     # -- agentic-workflow structure (visible to routers; lengths are not) --
     wid: int = -1             # workflow id (-1 = standalone request)
     step: int = 0             # step index within the workflow DAG
@@ -499,6 +502,40 @@ def assign_tenants(requests: List[Request], spec: TenantSpec, seed: int = 0,
         r.slo *= m
         if r.deadline_t is not None:
             r.deadline_t = r.arrival + r.slo
+    return requests
+
+
+def assign_regions(requests: List[Request],
+                   regions: Sequence[str],
+                   weights: Optional[Sequence[float]] = None,
+                   seed: int = 0,
+                   workflows: Optional[List["Workflow"]] = None
+                   ) -> List[Request]:
+    """Paint a regional arrival mix onto an existing trace, post hoc
+    and draw-preserving (own RNG stream — the base trace's draws are
+    untouched, so a regional and a flat run share arrivals and
+    lengths).  The tagging unit is a whole workflow when ``workflows``
+    is given — a DAG session originates from one client in one region —
+    and a single request otherwise.  ``weights`` skews the mix
+    (uniform by default).  Returns ``requests``."""
+    rng = np.random.default_rng(seed)
+    w = np.array([1.0] * len(regions) if weights is None else weights,
+                 float)
+    w /= w.sum()
+
+    def _draw() -> str:
+        return regions[int(rng.choice(len(regions), p=w))]
+
+    tagged_ids = set()
+    if workflows:
+        for wf in workflows:
+            region = _draw()
+            for s in wf.steps:
+                s.region = region
+                tagged_ids.add(id(s))
+    for r in requests:
+        if id(r) not in tagged_ids:
+            r.region = _draw()
     return requests
 
 

@@ -140,6 +140,28 @@ class Migrate(Decision):
 
 
 @dataclasses.dataclass(frozen=True, repr=False)
+class Handoff(Decision):
+    """Prefill→decode disaggregation transfer: the request just finished
+    prefilling on a prefill-role instance; move its state to
+    decode-capable instance ``dst`` so decoding happens there.  ``mode``
+    follows the migration crossover — "kv" ships the cache (no
+    re-prefill), "token_id" re-prefills at the target — resolved per
+    network tier, so the same pair of machines can plan differently
+    across a WAN hop.  Rides the migration machinery but is accounted
+    separately (``n_handoffs``, ``handoff_log``): it is planned
+    capacity steering, not a rescue.  Yielded only from
+    ``on_prefill_done``; yielding nothing there means the request
+    decodes where it prefilled (colocated fallback)."""
+    sr: object
+    dst: int
+    mode: str = "kv"
+
+    def __repr__(self):
+        return f"Handoff(rid={_rid(self.sr)}, dst={self.dst}, " \
+               f"mode={self.mode!r})"
+
+
+@dataclasses.dataclass(frozen=True, repr=False)
 class Provision(Decision):
     """Buy one instance of ``hw`` (catalog name or full spec).  The
     simulator executes and sends the new instance id back into the
@@ -311,6 +333,19 @@ class Policy:
     def on_request_done(self, sr, t: float):
         """A request the proxy routed streamed its last token."""
 
+    def on_request_failed(self, sr, t: float):
+        """A request reached a terminal failure (shed, cascade-shed, or
+        lost to capacity collapse) and will never complete.
+        NOTIFICATION-ONLY: settle per-request ledger state here; the
+        disposition was already decided."""
+
+    def on_prefill_done(self, sr, t: float):
+        """A request finished prefilling on a prefill-role instance
+        (role-split pools only — never fired for "both"/"decode"
+        roles).  May yield one ``Handoff`` to move decoding to a
+        decode-capable target; yielding nothing keeps the request
+        decoding in place (colocated fallback)."""
+
     def on_tick(self, t: float):
         """Periodic control tick.  May yield any decision."""
 
@@ -409,8 +444,8 @@ class ControlPlane:
         self._hooked = {
             h: [p for p in self._policies()
                 if getattr(type(p), h, None) is not getattr(Policy, h)]
-            for h in ("on_arrival", "on_request_done", "on_tick",
-                      "on_instance_join", "on_eviction_notice")}
+            for h in ("on_arrival", "on_request_done", "on_request_failed",
+                      "on_tick", "on_instance_join", "on_eviction_notice")}
 
     @property
     def cluster(self):
@@ -420,6 +455,13 @@ class ControlPlane:
         """Fresh proxy-visible snapshot of the whole pool — the only
         cluster surface policies may observe."""
         return self.sim.cluster.view(t)
+
+    def link(self, src_iid: int, dst_iid: int):
+        """Catalog fact: the network tier the topology resolves for an
+        instance pair (operator knowledge, like $/hr — not an engine
+        internal), so routers can price a migration or handoff before
+        deciding it."""
+        return self.sim.cluster.link(src_iid, dst_iid)
 
     # -- decision plumbing ---------------------------------------------------
 
@@ -522,6 +564,20 @@ class ControlPlane:
     def on_step_done(self, sr, t: float) -> Iterator[Decision]:
         yield from self._relay(self.router.on_step_done(sr, t),
                                kind="step_done")
+
+    def on_prefill_done(self, sr, t: float) -> Iterator[Decision]:
+        """A prefill-role instance finished a request's prefill: the
+        router picks the decode target (or keeps it colocated by
+        yielding nothing)."""
+        yield from self._relay(self.router.on_prefill_done(sr, t),
+                               kind="prefill_done")
+
+    def on_request_failed(self, sr, t: float) -> None:
+        """Terminal-failure notification fan-out (no decisions): the
+        request was shed/cascaded/lost and policies holding per-request
+        state settle it."""
+        for p in self._hooked["on_request_failed"]:
+            p.on_request_failed(sr, t)
 
     def on_request_done(self, sr, t: float) -> Iterator[Decision]:
         """Completion: policy hooks first, then belief feedback exactly

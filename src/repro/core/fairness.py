@@ -107,8 +107,12 @@ class FairnessPolicy(cplib.Policy):
 
     def _share_tps(self, tenant: int, seed_weights: bool = False) -> float:
         known = self.weights if seed_weights else self.deficit
-        total = (sum(self._weight(tn) for tn in known)
-                 if known else self._weight(tenant))
+        # the queried tenant always counts toward the weight total —
+        # _note_tenant computes a joiner's burst cap BEFORE inserting
+        # it into the deficit ledger, and a total that excludes the
+        # joiner over-grants every late-arriving tenant's first burst
+        names = sorted(set(known) | {tenant})
+        total = sum(self._weight(tn) for tn in names)
         return self.quantum_tps * self._weight(tenant) / max(total, 1e-9)
 
     def _burst_cap(self, tenant: int, seed_weights: bool = False) -> float:
@@ -181,6 +185,24 @@ class FairnessPolicy(cplib.Policy):
             # burst cap clamps any over-credit
             self.deficit[tn] += est - actual
 
+    def on_request_failed(self, sr, t: float):
+        """Terminal failure (shed, cascade-shed, or lost to capacity
+        collapse): forget the admission debit and refund the unserved
+        estimate — without this the ledger entry lived forever and the
+        tenant stayed debited for work that was never served.  Work the
+        pool actually did before the failure (the prefill plus any
+        streamed tokens, evidenced by a "run" journey entry) stays
+        charged; a request that never started refunds in full."""
+        if not self.enabled:
+            return
+        deb = self._debits.pop(sr.req.rid, None)
+        if deb is None:
+            return
+        tn, est = deb
+        ran = any(ev == "run" for _t, ev, _g in sr.journey)
+        actual = (int(sr.req.input_len) + int(sr.tokens_out)) if ran else 0
+        self.deficit[tn] += est - actual
+
     def on_tick(self, t: float):
         if not self.enabled:
             return
@@ -200,8 +222,11 @@ class FairnessPolicy(cplib.Policy):
         if not self._parked:
             return
         cv = self.plane.view(t)
-        if not any(v.alive and v.state in ("active", "draining", "evicting")
-                   for v in cv.instances):
+        # releasing needs ACCEPTING capacity: draining/evicting
+        # instances still finish what they hold but admit nothing new,
+        # so re-routing a parked request into such a pool would strand
+        # it on an instance that refuses admissions
+        if not cv.accepting():
             return                            # wait for capacity to warm
         pressure = self._pressure(cv)
         keep: List[Tuple[float, object]] = []
@@ -240,11 +265,17 @@ class FairnessPolicy(cplib.Policy):
             if not be:
                 continue
             # only act when an interactive request actually waits
-            # behind best-effort work on this instance
-            if not any(s.req.slo_class == "interactive"
-                       for s in qs[be[0] + 1:]):
+            # behind best-effort work on this instance — and only a
+            # victim AHEAD of it frees a slot that work is waiting on
+            # (queue [be, interactive, be]: parking the trailing
+            # best-effort gains the interactive request nothing)
+            inter = [i for i, s in enumerate(qs)
+                     if s.req.slo_class == "interactive"]
+            ahead = [i for i in be if inter and i < inter[-1]]
+            if not ahead:
                 continue
-            victim = qs[be[-1]]
+            victim = qs[ahead[-1]]            # newest eligible: least
+                                              # queue progress discarded
             ok = yield cplib.Preempt(sr=victim)
             if ok:
                 self._parked.append((t, victim))
@@ -266,4 +297,5 @@ class FairnessPolicy(cplib.Policy):
             "preempt_log": list(self.preempt_log),
             "release_log": list(self.release_log),
             "n_parked": len(self._parked),
+            "n_open_debits": len(self._debits),
         }

@@ -188,6 +188,9 @@ def summarize_elastic(finished, duration: float, cluster) -> dict:
                            if getattr(r, "preempted", False)),
         "preempt_violations": preemption_violations(finished),
         "pred_mae_tokens": prediction_mae_tokens(finished),
+        # prefill->decode disaggregation transfers (role-split pools;
+        # always 0 in flat pools)
+        "n_handoffs": sum(getattr(r, "n_handoffs", 0) for r in finished),
     })
     return s
 

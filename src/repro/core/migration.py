@@ -9,7 +9,7 @@ is why we carry both (DESIGN.md §3).
 from __future__ import annotations
 
 import dataclasses
-from typing import Optional
+from typing import Optional, Tuple
 
 from repro.cluster import hardware as hwlib
 
@@ -29,6 +29,39 @@ class NetworkSpec:
 
 ETHERNET_10G = NetworkSpec("10GbE", 10.0, 0.5)       # the paper's testbed
 TPU_DCN = NetworkSpec("tpu-dcn", 100.0, 0.3)         # inter-slice DCN
+WAN = NetworkSpec("wan", 2.0, 30.0)                  # inter-region backbone
+
+
+@dataclasses.dataclass(frozen=True)
+class Topology:
+    """Network tiers for a geo-distributed pool (Helix-style).
+
+    Any instance pair resolves to exactly one :class:`NetworkSpec`:
+    ``intra`` when both sit in the same region, ``inter`` otherwise —
+    unless ``links`` names the specific region pair (unordered), which
+    lets a pool model, e.g., a fat pipe between two nearby metros next
+    to a default WAN tier.  A flat single-tier pool is the degenerate
+    ``Topology(intra=net, inter=net)`` (see :func:`flat_topology`),
+    which prices every pair identically — byte-identical to the old
+    single-``NetworkSpec`` cluster.
+    """
+    intra: NetworkSpec = ETHERNET_10G
+    inter: NetworkSpec = WAN
+    links: Tuple[Tuple[str, str, NetworkSpec], ...] = ()
+
+    def tier(self, region_a: str, region_b: str) -> NetworkSpec:
+        if region_a == region_b:
+            return self.intra
+        key = frozenset((region_a, region_b))
+        for a, b, net in self.links:
+            if frozenset((a, b)) == key:
+                return net
+        return self.inter
+
+
+def flat_topology(net: NetworkSpec) -> Topology:
+    """The single-tier topology equivalent to a bare ``NetworkSpec``."""
+    return Topology(intra=net, inter=net)
 
 # engine-side coordination per migration: pause/drain the request at the
 # source, serialize state, RPC to the target scheduler, resume.  Applies
@@ -111,3 +144,28 @@ def transfer_crossover_context(net: NetworkSpec, hw_dst, fp,
         else:
             hi = mid
     return hi
+
+
+def plan_handoff(net: NetworkSpec, hw_dst, fp, context_len: int,
+                 prefix_hit: int = 0) -> str:
+    """Transfer mode for a prefill→decode handoff: ship the KV cache iff
+    it beats token IDs + re-prefill-at-the-target end-to-end on this
+    link.  Unlike :func:`plan_evacuation` there is no grace deadline —
+    the source is healthy — so this is the pure crossover decision,
+    resolved per network tier (a mode that wins intra-region can lose
+    across the WAN, where the per-token KV payload dominates)."""
+    kv = kv_cache_migration_latency(net, fp, context_len)
+    tok = token_id_migration_latency(net, hw_dst, fp, context_len,
+                                     prefix_hit)
+    return "kv" if kv <= tok else "token_id"
+
+
+def handoff_latency(net: NetworkSpec, hw_dst, fp, context_len: int,
+                    mode: str, prefix_hit: int = 0) -> float:
+    """End-to-end cost of a handoff in the given mode — what a
+    region-aware router deducts from a request's slack before choosing
+    a decode target."""
+    if mode == "kv":
+        return kv_cache_migration_latency(net, fp, context_len)
+    return token_id_migration_latency(net, hw_dst, fp, context_len,
+                                      prefix_hit)

@@ -74,11 +74,25 @@ class InstanceView:
     # spot preemption: the provider notifies the instance, the instance
     # notifies the proxy — both facts are proxy-visible
     eviction_deadline: float = None   # absolute kill time while evicting
+    # placement facts (operator catalog knowledge, like $/hr): the
+    # geographic region and the serving role in disaggregated pools
+    region: str = ""
+    role: str = "both"                # prefill|decode|both
     _inst: object = dataclasses.field(repr=False, compare=False, default=None)
 
     @property
     def pending(self) -> int:
         return self.n_queued + self.n_running
+
+    @property
+    def can_prefill(self) -> bool:
+        """May admit fresh arrivals (which start with a prefill)."""
+        return self.role != "decode"
+
+    @property
+    def can_decode(self) -> bool:
+        """May host the decode phase (handoff target eligibility)."""
+        return self.role != "prefill"
 
     @property
     def cost_per_hour(self) -> float:
@@ -185,7 +199,8 @@ def capture_instance(cluster, g, t: float) -> InstanceView:
         n_queued=len(g.queue), n_running=len(g.running),
         t=t, ema=cluster.estimator.snapshot(g.iid),
         hw=g.hw, fp=g.fp,
-        eviction_deadline=g.eviction_deadline, _inst=g)
+        eviction_deadline=g.eviction_deadline,
+        region=g.region, role=g.role, _inst=g)
 
 
 class ClusterView:
@@ -272,6 +287,17 @@ class ClusterView:
         """Preemptible instances currently serving (active spot)."""
         return [v for v in self.instances
                 if v.is_spot and v.alive and v.state == "active"]
+
+    def prefill_capable(self) -> List[InstanceView]:
+        """Accepting instances that may take fresh arrivals (role
+        "prefill" or "both") — the admission-routing target set in a
+        disaggregated pool."""
+        return [v for v in self.instances if v.accepting and v.can_prefill]
+
+    def decode_capable(self) -> List[InstanceView]:
+        """Accepting instances that may host decoding (role "decode" or
+        "both") — the handoff target set."""
+        return [v for v in self.instances if v.accepting and v.can_decode]
 
     def at_risk(self) -> List[InstanceView]:
         """Spot instances currently exposed to provider reclamation —

@@ -66,17 +66,28 @@ class Router(cplib.Policy):
         draining/evicting instances — stranding work on an empty target
         list would crash failure resubmission, and an evicting instance
         still serves for its grace window (its stragglers are
-        resubmitted at the kill)."""
+        resubmitted at the kill).  In role-split pools, fresh work goes
+        to prefill-capable instances (role "prefill"/"both") when any
+        accept — decode specialists only take queue-less handoffs — but
+        a decode-only remainder still beats stranding the request."""
         cv = self.view(t)
         views = cv.accepting()
         if views:
-            return views
+            pf = [v for v in views if v.can_prefill]
+            return pf or views
         drain = [v for v in cv.instances
                  if v.alive and v.state == "draining"]
         if drain:
             return drain
         return [v for v in cv.instances
                 if v.alive and v.state == "evicting"]
+
+    def decode_targets(self, t: float,
+                       exclude: int = -1) -> List[InstanceView]:
+        """Accepting decode-capable instances (role "decode"/"both"),
+        minus ``exclude`` — the eligible handoff destinations."""
+        cv = self.view(t)
+        return [v for v in cv.decode_capable() if v.iid != exclude]
 
     # -- interface ----------------------------------------------------------
 
@@ -95,6 +106,22 @@ class Router(cplib.Policy):
         decision sees the previous victim already enqueued."""
         for sr in victims:
             yield Route(self.route(sr, t), sr=sr)
+
+    def on_prefill_done(self, sr: SimRequest, t: float):
+        """Default disaggregation hand-off, deliberately
+        region-OBLIVIOUS: least-pending decode-capable target, transfer
+        mode per the crossover model on whatever link that pair
+        resolves to.  This is the naive router fig19 measures against —
+        it happily ships KV across the WAN.  Yields nothing (decode
+        colocated) only when no decode target exists."""
+        views = self.decode_targets(t, exclude=sr.instance)
+        if not views:
+            return
+        v = min(views, key=lambda w: (w.pending, w.iid))
+        net = self.plane.link(sr.instance, v.iid)
+        mode = miglib.plan_handoff(net, v.hw, v.fp, sr.context_len,
+                                   prefix_hit=v.prefix_hit(sr.req))
+        yield cplib.Handoff(sr=sr, dst=v.iid, mode=mode)
 
 
 # ---------------------------------------------------------------------------
@@ -396,6 +423,35 @@ class GoodServeRouter(Router):
                     + v.ema.p * max(context_len, 0.0))
         return p_evict * recovery
 
+    def _hop_costs(self, sr: SimRequest, views, t: float):
+        """Expected prefill→decode handoff latency if this arrival is
+        admitted on each candidate — nonzero only for prefill-role
+        candidates (zero everywhere in flat pools, keeping legacy
+        replay byte-identical).  GoodServe budgets the region hop at
+        admission the way it budgets downstream workflow steps: the
+        cost is deducted from slack in the feasibility test, so a
+        tight request avoids a prefill instance whose only decode
+        escape crosses the WAN."""
+        hop = np.zeros(len(views))
+        if not any(v.role == "prefill" for v in views):
+            return hop
+        dec = self.decode_targets(t)
+        ctx = sr.req.input_len
+        for i, v in enumerate(views):
+            if v.role != "prefill":
+                continue
+            costs = []
+            for w in dec:
+                if w.iid == v.iid:
+                    continue
+                net = self.plane.link(v.iid, w.iid)
+                mode = miglib.plan_handoff(net, w.hw, w.fp, ctx)
+                costs.append(miglib.handoff_latency(net, w.hw, w.fp,
+                                                    ctx, mode))
+            if costs:
+                hop[i] = min(costs)
+        return hop
+
     def _latencies(self, sr: SimRequest, views, remaining_out: float,
                    context_len: int, t: float):
         """Vectorized T(r,g) over candidate instance views (Eq. 2)."""
@@ -437,7 +493,9 @@ class GoodServeRouter(Router):
         ctx = sr.req.input_len + sr.pred_out
         risk = np.array([self._eviction_risk(v, float(T[i]), ctx)
                          for i, v in enumerate(views)])
-        feasible = np.nonzero(R + unc + risk <= self.margin * slack)[0]
+        hop = self._hop_costs(sr, views, t)
+        feasible = np.nonzero(R + hop + unc + risk
+                              <= self.margin * slack)[0]
         if feasible.size:                       # just-enough: slowest feasible
             if sr.req.session >= 0:
                 # prefer the instance holding the session's cached prefix
@@ -445,6 +503,14 @@ class GoodServeRouter(Router):
                                  for i in feasible])
                 if (hits > 0).any():
                     feasible = feasible[hits > 0]
+            if sr.req.region:
+                # regional arrival mix: among feasible candidates,
+                # prefer the request's origin region — keeps the later
+                # prefill→decode hop (and any rescue) intra-region
+                same = np.array([views[int(i)].region == sr.req.region
+                                 for i in feasible])
+                if same.any():
+                    feasible = feasible[same]
             # just-enough across SPEED CLASSES, load-balanced within one:
             # concentrating on the single max-d instance preserves fast
             # GPUs in a heterogeneous pool, but in a pool of near-equal
@@ -515,6 +581,51 @@ class GoodServeRouter(Router):
             if R[k] >= 0.8 * finish_here:
                 return
         yield Migrate(sr, views[k].iid, self.migration_mode)
+
+    def on_prefill_done(self, sr: SimRequest, t: float):
+        """Region- and role-aware decode placement (the disaggregation
+        chain's second link).  For every decode-capable target, price
+        the hop on the network tier this pair resolves to (crossover
+        picks KV vs token-ID per tier), deduct it from the remaining
+        slack exactly like a downstream workflow step, and drop targets
+        that cannot clear the deadline.  Among the survivors prefer
+        same-region (the WAN tier only wins when nothing nearby is
+        feasible), then earliest finish.  When NO handoff clears the
+        deadline, yield nothing: the request decodes where it prefilled
+        — slower silicon for decode is better than a missed SLO."""
+        cv = self.view(t)
+        views = [v for v in cv.decode_capable() if v.iid != sr.instance]
+        if not views:
+            return
+        total_pred = max(self._predict(sr), sr.tokens_out + 1.0)
+        remaining = total_pred - sr.tokens_out
+        sr.pred_out = total_pred
+        slack = (sr.deadline - t) * self.class_slack.get(sr.req.slo_class,
+                                                         1.0)
+        down = self._downstream_steps(sr)
+        unit = self._downstream_unit(sr) if down else 0.0
+        here = cv.view(sr.instance)
+        self._prune_recent(t)
+        best = None
+        for v in views:
+            net = self.plane.link(sr.instance, v.iid)
+            hit = v.prefix_hit(sr.req)
+            mode = miglib.plan_handoff(net, v.hw, v.fp, sr.context_len,
+                                       prefix_hit=hit)
+            R = (miglib.handoff_latency(net, v.hw, v.fp, sr.context_len,
+                                        mode, prefix_hit=hit)
+                 + self._queue_estimate(v, t)
+                 + v.ema.d * (remaining + down * unit))
+            risk = self._eviction_risk(v, R, sr.context_len + remaining)
+            if R + risk > self.margin * slack:
+                continue
+            key = (0 if v.region == here.region else 1, R, v.iid)
+            if best is None or key < best[0]:
+                best = (key, v, mode)
+        if best is None:
+            return
+        _, v, mode = best
+        yield cplib.Handoff(sr=sr, dst=v.iid, mode=mode)
 
     def on_request_done(self, sr: SimRequest, t: float):
         # per-instance completion-rate window (the slot-wait signal).

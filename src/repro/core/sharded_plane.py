@@ -86,10 +86,11 @@ class _StaleCluster:
     ``instances`` exposes the snapshot's InstanceViews, which carry
     exactly the lifecycle scalars the replica's disposition logic
     reads."""
-    __slots__ = ("_shard",)
+    __slots__ = ("_shard", "_live")
 
-    def __init__(self, shard: _Shard):
+    def __init__(self, shard: _Shard, live):
         self._shard = shard
+        self._live = live
 
     @property
     def instances(self):
@@ -99,6 +100,13 @@ class _StaleCluster:
         s = self._shard
         s.max_staleness = max(s.max_staleness, t - s.last_sync)
         return s.snapshot
+
+    def link(self, src_iid: int, dst_iid: int):
+        """Network-tier resolution delegates to the live cluster:
+        topology and instance regions are static operator catalog
+        facts, not replicated view state — there is nothing to be
+        stale about."""
+        return self._live.link(src_iid, dst_iid)
 
 
 class _ReplicaContext:
@@ -179,7 +187,7 @@ class ShardedControlPlane(ControlPlane):
         live = self.sync_interval_s <= 0
         for s in self.shards:
             ctx = _ReplicaContext(sim.cluster if live
-                                  else _StaleCluster(s))
+                                  else _StaleCluster(s, sim.cluster))
             s.replica.attach(ctx)
         if not live:
             self._sync(self.shards, 0.0)
@@ -344,11 +352,22 @@ class ShardedControlPlane(ControlPlane):
         yield from self._relay_shard(
             shard, shard.replica.on_step_done(sr, t), "step_done")
 
+    def on_prefill_done(self, sr, t: float) -> Iterator[Decision]:
+        self._maybe_sync(t)
+        shard = self._shard_for(sr)
+        yield from self._relay_shard(
+            shard, shard.replica.on_prefill_done(sr, t), "prefill_done")
+
     def on_request_done(self, sr, t: float) -> Iterator[Decision]:
         self._maybe_sync(t)
         shard = self._shard_for(sr)
         yield from self._relay_shard(
             shard, shard.replica.on_request_done(sr, t), "request_done")
+
+    def on_request_failed(self, sr, t: float) -> None:
+        # notification, no decisions: settle the owning replica's
+        # per-request ledger state (fairness debits)
+        self._shard_for(sr).replica.on_request_failed(sr, t)
 
     def on_tick(self, t: float) -> Iterator[Decision]:
         self._maybe_sync(t)

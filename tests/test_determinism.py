@@ -14,13 +14,14 @@ from conftest import ConstPredictor
 
 from repro.cluster import hardware as hwlib
 from repro.cluster.simulator import Cluster, Instance, Simulator
-from repro.cluster.workload import (TenantSpec, assign_tenants,
-                                    make_workflow_workload)
+from repro.cluster.workload import (TenantSpec, assign_regions,
+                                    assign_tenants, make_workflow_workload)
 from repro.core.controller import (AdmissionController,
                                    ForecastPoolController,
                                    ReactivePoolController)
 from repro.core.control_plane import ControlPlane
 from repro.core.fairness import FairnessPolicy
+from repro.core import migration as miglib
 from repro.core.metrics import (per_class_breakdown, per_tenant_breakdown,
                                 summarize_elastic, summarize_workflows)
 from repro.core.rectify import EvictionRateEstimator, OnlineSurvival
@@ -287,6 +288,89 @@ def test_sharded_replay_has_discriminating_power():
     assert "sync_log" not in log            # sanity: repr of tuples only
     assert _run_sharded("goodserve", seed=8) != log
     assert _run_sharded("goodserve", interval=2.0) != log
+
+
+def _region_workload(seed: int):
+    """The workflow workload with two-region origins painted on (the
+    same post-hoc draw-preserving pattern as tenants)."""
+    reqs, wfs = make_workflow_workload(n_workflows=6, rps=2.0,
+                                       slo_scale=3.0, seed=seed)
+    assign_regions(reqs, ("east", "west"), seed=seed + 50, workflows=wfs)
+    return reqs, wfs
+
+
+def _run_disagg(router_name: str, seed: int = 7, n_shards: int = 0) -> str:
+    """Fingerprint over a GEO-DISTRIBUTED role pool: two regions on a
+    two-tier topology (10 GbE intra, WAN inter), a prefill-role instance
+    feeding decode-role targets through ``Handoff`` decisions, plus a
+    spot instance so evacuation is priced on the resolved tier.  The
+    handoff log and per-request handoff counts join the replay contract
+    (sharded N=2 variant via ``n_shards``)."""
+    reqs, wfs = _region_workload(seed)
+    cluster = Cluster(
+        [Instance(0, hwlib.GPUS["H800"], FP, region="east",
+                  role="prefill"),
+         Instance(1, hwlib.GPUS["A800"], FP, region="east",
+                  role="decode"),
+         Instance(2, hwlib.GPUS["A800"], FP, region="west", role="both"),
+         Instance(3, _spot_a800(), FP, region="west", role="decode")],
+        topology=miglib.Topology(intra=miglib.ETHERNET_10G,
+                                 inter=miglib.WAN))
+
+    def replica(_i=0):
+        pred = ConstPredictor(180.0)
+        router = make_router(
+            router_name,
+            predictor=pred if router_name == "goodserve" else None)
+        return ControlPlane(router=router,
+                            admission=AdmissionController(pred, margin=3.0))
+
+    plane = (make_sharded_plane(n_shards, replica, sync_interval_s=0.5)
+             if n_shards else replica())
+    sim = Simulator(cluster, plane, reqs, workflows=wfs, spot_seed=3)
+    out, dur = sim.run()
+    lines = []
+    for sr in out:
+        lines.append(repr((sr.req.rid, sr.req.region, sr.state,
+                           sr.instance, sr.tokens_out, sr.n_migrations,
+                           sr.n_handoffs, sr.preempted, sr.finished_at,
+                           tuple(sr.journey))))
+    lines.append(repr(sim.handoff_log))
+    lines.append(repr(sim.migration_log))
+    lines.append(repr(sim.eviction_log))
+    lines.append(repr(sim.plane.decision_log))
+    if n_shards:
+        lines.append(repr(sim.plane.conflict_log))
+        for s in sim.plane.shards:
+            lines.append(repr((s.idx, s.replica.decision_log)))
+    lines.append(repr(sorted(summarize_elastic(out, dur, cluster).items())))
+    lines.append(repr(dur))
+    return "\n".join(lines)
+
+
+@pytest.mark.parametrize("router_name", ROUTERS)
+def test_disagg_same_seed_replays_byte_identical(router_name):
+    a = _run_disagg(router_name)
+    b = _run_disagg(router_name)
+    assert a == b, (f"{router_name}: same-seed replay diverged on the "
+                    f"geo-distributed role pool")
+
+
+@pytest.mark.parametrize("router_name", ["goodserve", "least_request"])
+def test_sharded_disagg_replays_byte_identical(router_name):
+    a = _run_disagg(router_name, n_shards=2)
+    b = _run_disagg(router_name, n_shards=2)
+    assert a == b, (f"{router_name}: sharded (N=2) same-seed replay "
+                    f"diverged on the geo-distributed role pool")
+
+
+def test_disagg_fingerprint_exercises_handoffs():
+    """The fingerprint only guards the handoff path if the scenario
+    drives it: prefill-role completions must hand off, and a different
+    seed must not replay identically."""
+    log = _run_disagg("least_request")
+    assert "'handoff'" in log, "no prefill→decode handoff ever fired"
+    assert _run_disagg("least_request", seed=8) != log
 
 
 @pytest.mark.parametrize("controller", CONTROLLERS)

@@ -217,6 +217,110 @@ def test_preemption_parks_best_effort_and_releases_it():
     assert tags.count("enq") >= 2
 
 
+# ---- debit settlement on terminal failure -----------------------------------
+
+def test_failed_requests_settle_their_admission_debits():
+    """Regression: the DRR ledger debited every admitted request but only
+    ``on_request_done`` settled, so a debit for work that later FAILED
+    (shed cascade, lost to capacity collapse) lived in ``_debits``
+    forever and the tenant stayed charged for tokens that were never
+    served.  A spot-only pool whose single instance is reclaimed loses
+    every in-flight admitted request — the ledger must come back empty."""
+    reqs = [_req(i, 0.01 * i, tenant=i % 2, slo_class="standard",
+                 input_len=300, output_len=200) for i in range(16)]
+    spot = hwlib.spot_variant(hwlib.GPUS["A800"],
+                              evictions_per_hour=50000.0, grace_s=0.2)
+    fair = FairnessPolicy(quantum_tps=1e9, burst_s=100.0,
+                          overload_pending=1e9, class_shed={},
+                          preempt=False)
+    sim = Simulator(Cluster([Instance(0, spot, FP)]),
+                    make_router("least_request"), reqs,
+                    fairness=fair, spot_seed=5)
+    out, _ = sim.run()
+    failed_admitted = [sr for sr in out if sr.state == "failed"
+                       and any(ev == "enq" for _t, ev, _g in sr.journey)]
+    assert failed_admitted, "scenario must fail admitted (debited) work"
+    assert fair.ledger()["n_open_debits"] == 0
+    assert fair._debits == {}
+
+
+# ---- priority preemption victim selection -----------------------------------
+
+def test_preempt_victim_sits_ahead_of_the_interactive_request():
+    """Regression: the victim used to be the LAST queued best-effort
+    request, which can sit BEHIND the interactive request it was meant
+    to unblock (queue [be, interactive, be] parked the trailing one —
+    progress thrown away, interactive still stuck).  The victim must be
+    the newest best-effort AHEAD of the last interactive request."""
+    reqs = [
+        _req(0, 0.000, tenant=1, slo_class="interactive", output_len=400),
+        _req(1, 0.001, tenant=0, slo_class="best_effort", output_len=80),
+        _req(2, 0.002, tenant=1, slo_class="interactive", output_len=80),
+        _req(3, 0.003, tenant=0, slo_class="best_effort", output_len=80),
+    ]
+    fair = FairnessPolicy(quantum_tps=1e9, burst_s=100.0,
+                          overload_pending=1e9, class_shed={},
+                          preempt=True, max_preempts_per_tick=1,
+                          park_timeout_s=0.5, release_pending=0.0)
+    sim = Simulator(_cluster(max_seqs=1), make_router("least_request"),
+                    reqs, fairness=fair)
+    out, _ = sim.run()
+    # queue at the first preempting tick: [be(1), interactive(2), be(3)]
+    assert fair.preempt_log, "scenario must trigger a preemption"
+    assert fair.preempt_log[0][1] == 1
+    assert all(rid != 3 for _t, rid, _g in fair.preempt_log)
+    assert all(sr.state == "done" for sr in out)   # nothing stranded
+
+
+# ---- parked-work release needs ACCEPTING capacity ---------------------------
+
+def test_release_waits_for_accepting_capacity():
+    """Regression: the release guard only required a LIVE instance, and
+    draining/evicting instances are live — a park-timeout expiry with
+    only a draining pool re-routed the parked request into an instance
+    that admits nothing, stranding it.  Release must wait for accepting
+    capacity (``cv.accepting()``), then fire on the next tick."""
+    reqs = [_req(0, 0.0, tenant=0, slo_class="standard", output_len=20)]
+    fair = FairnessPolicy(quantum_tps=1e9, burst_s=100.0,
+                          overload_pending=1e9, class_shed={},
+                          preempt=False, park_timeout_s=0.0)
+    sim = Simulator(_cluster(), make_router("least_request"), reqs,
+                    fairness=fair)
+    sim.run()
+    from repro.cluster.simulator import SimRequest
+    parked = SimRequest(req=_req(9, 0.0, tenant=0,
+                                 slo_class="best_effort"))
+    fair._parked = [(0.0, parked)]
+    g = sim.cluster.instances[0]
+    g.state = "draining"                  # live, finishing, admits nothing
+    assert list(fair.on_tick(50.0)) == []
+    assert fair._parked and not fair.release_log
+    g.state = "active"
+    rel = list(fair.on_tick(51.0))
+    assert len(rel) == 1 and rel[0].sr is parked
+    assert fair.release_log and fair.release_log[0][1] == 9
+
+
+# ---- burst-cap share math ----------------------------------------------------
+
+def test_late_tenant_burst_cap_counts_itself_in_the_share():
+    """Regression: a joining tenant's first burst cap summed the weights
+    of ALREADY-KNOWN tenants only — the joiner itself was missing from
+    the denominator, so the second of two equal-weight tenants got the
+    WHOLE quantum as its opening burst instead of half."""
+    fair = FairnessPolicy(quantum_tps=1000.0, burst_s=2.0)
+    fair._note_tenant(0)
+    # first-ever tenant: alone in the pool, the full quantum is its share
+    assert fair.deficit[0] == pytest.approx(2000.0)
+    fair._note_tenant(1)
+    # the joiner splits with tenant 0: 1000 tps * 1/2 * 2 s, not 2000
+    assert fair.deficit[1] == pytest.approx(1000.0)
+    # and re-noting is idempotent — no burst re-grant
+    fair.deficit[1] -= 400.0
+    fair._note_tenant(1)
+    assert fair.deficit[1] == pytest.approx(600.0)
+
+
 # ---- per-class cascade accounting -------------------------------------------
 
 def test_shed_cascade_tags_descendants_per_class():

@@ -1,0 +1,175 @@
+"""Geo-distributed topology + prefill/decode role pools: tier
+resolution, the per-tier handoff crossover, topology-priced transfers,
+and the end-to-end prefill→handoff→decode request path (including the
+colocated fallback when no decode target exists)."""
+import dataclasses
+
+import pytest
+from conftest import ConstPredictor
+
+from repro.cluster import hardware as hwlib
+from repro.cluster.simulator import Cluster, Instance, Simulator
+from repro.cluster.workload import Request, assign_regions, make_workload
+from repro.core import migration as miglib
+from repro.core.control_plane import ControlPlane
+from repro.core.router import make_router
+
+FP = hwlib.footprint("llama3.1-8b")
+FAT = miglib.NetworkSpec("metro", 40.0, 2.0)
+
+
+def _req(rid, arrival=0.0, input_len=400, output_len=40, region=""):
+    return Request(rid=rid, family="sql", prompt="p", input_len=input_len,
+                   output_len=output_len, arrival=arrival, slo=1e9,
+                   region=region)
+
+
+# ---- tier resolution --------------------------------------------------------
+
+def test_topology_resolves_tiers_and_named_links():
+    topo = miglib.Topology(intra=miglib.ETHERNET_10G, inter=miglib.WAN,
+                           links=(("east", "west", FAT),))
+    assert topo.tier("east", "east") is miglib.ETHERNET_10G
+    # the named pair wins over the default inter tier, either order
+    assert topo.tier("east", "west") is FAT
+    assert topo.tier("west", "east") is FAT
+    # unnamed cross-region pairs fall back to the inter tier
+    assert topo.tier("east", "eu") is miglib.WAN
+    # a flat topology prices every pair identically (legacy clusters)
+    flat = miglib.flat_topology(miglib.ETHERNET_10G)
+    for pair in [("a", "a"), ("a", "b"), ("", "x")]:
+        assert flat.tier(*pair) is miglib.ETHERNET_10G
+
+
+def test_cluster_link_uses_instance_regions():
+    topo = miglib.Topology(intra=miglib.ETHERNET_10G, inter=miglib.WAN)
+    cluster = Cluster([Instance(0, hwlib.GPUS["A800"], FP, region="east"),
+                       Instance(1, hwlib.GPUS["A800"], FP, region="east"),
+                       Instance(2, hwlib.GPUS["A800"], FP, region="west")],
+                      topology=topo)
+    assert cluster.link(0, 1) is miglib.ETHERNET_10G
+    assert cluster.link(0, 2) is miglib.WAN
+    # without an explicit topology the cluster is flat on its net —
+    # byte-identical to the pre-topology single-NetworkSpec behavior
+    legacy = Cluster([Instance(0, hwlib.GPUS["A800"], FP, region="east"),
+                      Instance(1, hwlib.GPUS["A800"], FP, region="west")])
+    assert legacy.link(0, 1) is legacy.net
+
+
+def test_instance_region_and_role_defaults():
+    # region defaults from the HardwareSpec; per-replica override wins
+    hw = dataclasses.replace(hwlib.GPUS["A800"], region="eu")
+    assert Instance(0, hw, FP).region == "eu"
+    assert Instance(0, hw, FP, region="us").region == "us"
+    g = Instance(0, hwlib.GPUS["A800"], FP)
+    assert g.region == "" and g.role == "both"
+    with pytest.raises(ValueError):
+        Instance(0, hwlib.GPUS["A800"], FP, role="decoder")
+
+
+# ---- the per-tier handoff crossover -----------------------------------------
+
+def test_handoff_mode_flips_across_the_wan():
+    """Intra-region 10 GbE ships the KV cache (no re-prefill); the same
+    context across a 2 Gb/s WAN ships token IDs — the per-token KV
+    payload dominates the slow tier.  The mode must agree with the
+    latency model it is derived from, per tier."""
+    hw = hwlib.GPUS["A40"]
+    ctx = 900
+    assert miglib.plan_handoff(miglib.ETHERNET_10G, hw, FP, ctx) == "kv"
+    assert miglib.plan_handoff(miglib.WAN, hw, FP, ctx) == "token_id"
+    for net in (miglib.ETHERNET_10G, miglib.WAN):
+        mode = miglib.plan_handoff(net, hw, FP, ctx)
+        kv = miglib.kv_cache_migration_latency(net, FP, ctx)
+        tok = miglib.token_id_migration_latency(net, hw, FP, ctx)
+        assert (mode == "kv") == (kv <= tok)
+        assert miglib.handoff_latency(net, hw, FP, ctx, mode) == \
+            pytest.approx(min(kv, tok))
+
+
+# ---- region tagging ---------------------------------------------------------
+
+def test_assign_regions_is_post_hoc_and_deterministic():
+    """Same contract as assign_tenants: the base workload's draws are
+    untouched, tagging is reproducible, and weights shape the mix."""
+    base = make_workload(n=60, rps=20.0, slo_scale=2.0, seed=5)
+    tagged = make_workload(n=60, rps=20.0, slo_scale=2.0, seed=5)
+    assign_regions(tagged, ("east", "west"), weights=(0.8, 0.2), seed=9)
+    for b, r in zip(base, tagged):
+        assert (b.arrival, b.input_len, b.output_len, b.slo) == \
+            (r.arrival, r.input_len, r.output_len, r.slo)
+        assert r.region in ("east", "west")
+    east = sum(1 for r in tagged if r.region == "east")
+    assert east > len(tagged) * 0.6
+    again = make_workload(n=60, rps=20.0, slo_scale=2.0, seed=5)
+    assign_regions(again, ("east", "west"), weights=(0.8, 0.2), seed=9)
+    assert [r.region for r in again] == [r.region for r in tagged]
+
+
+# ---- end-to-end role pools --------------------------------------------------
+
+def _role_pool(inter=miglib.ETHERNET_10G, decode_region="east"):
+    topo = miglib.Topology(intra=miglib.ETHERNET_10G, inter=inter)
+    return Cluster(
+        [Instance(0, hwlib.GPUS["H800"], FP, region="east",
+                  role="prefill"),
+         Instance(1, hwlib.GPUS["A800"], FP, region=decode_region,
+                  role="decode")],
+        topology=topo)
+
+
+@pytest.mark.parametrize("router_name", ["least_request", "goodserve"])
+def test_prefill_completes_then_hands_off_to_decode_role(router_name):
+    cluster = _role_pool()
+    pred = ConstPredictor(40.0)
+    router = make_router(
+        router_name, predictor=pred if router_name == "goodserve" else None)
+    sim = Simulator(cluster, ControlPlane(router=router),
+                    [_req(0, region="east")])
+    out, _ = sim.run()
+    sr = out[0]
+    assert sr.state == "done" and sr.n_handoffs == 1
+    tags = [ev for _t, ev, _g in sr.journey]
+    assert "handoff" in tags
+    # prefilled on the prefill-role instance, decoded on the decode one
+    assert sr.journey[0][2] == 0 and sr.instance == 1
+    # the transfer is priced on the resolved tier in the planned mode
+    # (re-prefill for token_id is charged at the target, not in the log)
+    (_t, src, dst, mode, lat), = sim.handoff_log
+    assert (src, dst) == (0, 1)
+    net = cluster.link(0, 1)
+    assert mode == miglib.plan_handoff(net, cluster.instances[1].hw,
+                                       FP, 400)
+    expect = (miglib.kv_transfer_latency(net, FP, 400) if mode == "kv"
+              else miglib.token_id_transfer_latency(net, 400))
+    assert lat == pytest.approx(expect)
+
+
+def test_inter_region_handoff_pays_the_wan_tier():
+    """The same pool with its decode instance moved across the WAN: the
+    crossover flips to token IDs and the logged transfer is priced on
+    the inter tier, not the intra one."""
+    cluster = _role_pool(inter=miglib.WAN, decode_region="west")
+    sim = Simulator(cluster, ControlPlane(router=make_router(
+        "least_request")), [_req(0, region="east")])
+    out, _ = sim.run()
+    assert out[0].state == "done" and out[0].n_handoffs == 1
+    (_t, _src, _dst, mode, lat), = sim.handoff_log
+    assert mode == "token_id"
+    assert lat == pytest.approx(
+        miglib.token_id_transfer_latency(miglib.WAN, 400))
+    # priced on the inter tier, not the intra one (the 30 ms WAN RTT)
+    assert lat > miglib.token_id_transfer_latency(miglib.ETHERNET_10G, 400)
+
+
+def test_no_decode_target_decodes_in_place():
+    """Colocated fallback: a prefill-role instance with no decode-capable
+    peer keeps the request and decodes it locally — yielding no Handoff
+    is always legal, and nothing strands."""
+    cluster = Cluster([Instance(0, hwlib.GPUS["H800"], FP, region="east",
+                                role="prefill")])
+    sim = Simulator(cluster, ControlPlane(router=make_router(
+        "least_request")), [_req(0)])
+    out, _ = sim.run()
+    assert out[0].state == "done"
+    assert out[0].n_handoffs == 0 and not sim.handoff_log
