@@ -36,7 +36,8 @@ def _suites(fast: bool) -> dict:
                             fig11_overhead, fig12_workflows,
                             fig13_autoscale, fig14_spot, fig15_rectify,
                             fig16_sharded, fig17_calibration,
-                            fig18_fairness, fig19_disagg, roofline)
+                            fig18_fairness, fig19_disagg, fig20_learned,
+                            roofline)
 
     n_sim = 200 if fast else 400
     epochs = 12 if fast else 40
@@ -93,6 +94,12 @@ def _suites(fast: bool) -> dict:
         # in-run gp/$ and WAN-penalty assertions hold either way)
         "fig19": _Suite(fig19_disagg.run, kw=dict(n=1500),
                         fast_kw=dict(n=500), seedable=True),
+        # fast mode keeps the full trace (the warm-start needs the
+        # training signal; the sim is cheap) and trims eval seeds plus
+        # two of the three off-policy certification replays
+        "fig20": _Suite(fig20_learned.run,
+                        fast_kw=dict(n_seeds=2, fast=True),
+                        seedable=True),
         "roofline": _Suite(roofline.run),
     }
 

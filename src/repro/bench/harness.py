@@ -60,15 +60,21 @@ class ExperimentSpec:
     * ``sim_kw``   — extra Simulator knobs (tau, spot_seed,
       preemptions, fail_at, ...),
     * ``summarize`` — optional override: (out, dur, cluster) -> dict
-      replaces the default elastic/workflow summary entirely.
+      replaces the default elastic/workflow summary entirely,
+    * ``train``    — optional trainable-policy hook: () -> artifact,
+      called ONCE before the seed loop (offline training on a logged
+      DecisionTrace, a fitted posterior, ...); when set, the plane
+      factory is called as ``plane(cluster, artifact)`` so every seed's
+      fresh policies warm-start from the SAME trained state.
     """
     name: str
     pool: Callable[[], Cluster]
     workload: Callable[[int], Any]
-    plane: Callable[[Cluster], Any]
+    plane: Callable[..., Any]
     seeds: Sequence[int] = (0,)
     sim_kw: Mapping[str, Any] = dataclasses.field(default_factory=dict)
     summarize: Optional[Callable] = None
+    train: Optional[Callable[[], Any]] = None
 
 
 @dataclasses.dataclass
@@ -143,6 +149,7 @@ class ResultList(list):
 def run_experiment(spec: ExperimentSpec) -> "ResultList":
     """Build, run, and summarize one spec — once per seed."""
     results = ResultList()
+    trained = spec.train() if spec.train is not None else None
     for seed in spec.seeds:
         wl = spec.workload(seed)
         reqs, wfs = wl if isinstance(wl, tuple) else (wl, None)
@@ -150,7 +157,8 @@ def run_experiment(spec: ExperimentSpec) -> "ResultList":
         # take the span before the run
         span = max((r.arrival for r in reqs), default=1.0)
         cluster = spec.pool()
-        plane = spec.plane(cluster)
+        plane = (spec.plane(cluster, trained)
+                 if spec.train is not None else spec.plane(cluster))
         if not isinstance(plane, ControlPlane):
             plane = ControlPlane(router=plane)
         sim = Simulator(cluster, plane, reqs, workflows=wfs,

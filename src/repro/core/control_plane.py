@@ -386,7 +386,7 @@ class ControlPlane:
     """
 
     def __init__(self, router, pool=None, admission=None, beliefs=None,
-                 fairness=None):
+                 fairness=None, record=False):
         if router is None:
             raise ValueError("a ControlPlane needs a router policy")
         self.router = router
@@ -411,6 +411,13 @@ class ControlPlane:
         # hook fast path, filled at attach: per hook name, the policies
         # that actually override it
         self._hooked: Dict[str, list] = {}
+        # decision-trace recording (core/replay.py): behavior-neutral by
+        # construction — a recorded run replays byte-identical to an
+        # unrecorded one (tests/test_replay.py)
+        self.recorder = None
+        if record:
+            from repro.core.replay import TraceRecorder
+            self.recorder = TraceRecorder()
 
     # -- wiring --------------------------------------------------------------
 
@@ -446,6 +453,17 @@ class ControlPlane:
                 if getattr(type(p), h, None) is not getattr(Policy, h)]
             for h in ("on_arrival", "on_request_done", "on_request_failed",
                       "on_tick", "on_instance_join", "on_eviction_notice")}
+        if self.recorder is not None:
+            self.recorder.bind(self, sim)
+
+    @property
+    def trace(self):
+        """The recorded :class:`~repro.core.replay.DecisionTrace` (plane
+        constructed with ``record=True`` only)."""
+        if self.recorder is None:
+            raise ValueError("ControlPlane was not constructed with "
+                             "record=True; no trace was recorded")
+        return self.recorder.to_trace()
 
     @property
     def cluster(self):
@@ -528,6 +546,8 @@ class ControlPlane:
         t0 = time.perf_counter()
         d = self._arrival_decision(sr, t)
         self.latency.record("arrival", time.perf_counter() - t0)
+        if self.recorder is not None:
+            self.recorder.record_arrival(self, sr, t, d)
         return d
 
     def _arrival_decision(self, sr, t: float) -> Decision:
@@ -576,12 +596,18 @@ class ControlPlane:
         """Terminal-failure notification fan-out (no decisions): the
         request was shed/cascaded/lost and policies holding per-request
         state settle it."""
+        if self.recorder is not None:
+            # a terminal failure is a ZERO-reward outcome in the trace,
+            # never a silently dropped sample
+            self.recorder.record_outcome(sr, t, failed=True)
         for p in self._hooked["on_request_failed"]:
             p.on_request_failed(sr, t)
 
     def on_request_done(self, sr, t: float) -> Iterator[Decision]:
         """Completion: policy hooks first, then belief feedback exactly
         once per component (rectifier curves, online predictors)."""
+        if self.recorder is not None:
+            self.recorder.record_outcome(sr, t, failed=False)
         for p in self._hooked["on_request_done"]:
             yield from self._relay(p.on_request_done(sr, t),
                                    kind="request_done")

@@ -325,7 +325,10 @@ class AdmissionController(cplib.Policy):
     name = "early_shed"
 
     def __init__(self, predictor=None, margin: float = 1.0, min_obs: int = 3,
-                 rectifier=None, beliefs: Beliefs = None):
+                 rectifier=None, beliefs: Beliefs = None,
+                 adaptive: bool = False, target_regret: float = 0.05,
+                 adapt_gain: float = 1.0,
+                 margin_bounds: Tuple[float, float] = (0.25, 4.0)):
         super().__init__()
         if beliefs is not None:
             if predictor is not None or rectifier is not None:
@@ -337,6 +340,32 @@ class AdmissionController(cplib.Policy):
         self.margin = margin
         self.min_obs = min_obs
         self.shed_log: List[Tuple[float, int]] = []   # (t, rid)
+        # replay-calibrated margin adaptation (off by default: admit
+        # behavior is byte-identical to the fixed-margin controller
+        # unless the operator both opts in AND feeds a regret
+        # measurement from core.replay.shed_regret)
+        self.adaptive = adaptive
+        self.target_regret = target_regret
+        self.adapt_gain = adapt_gain
+        self.margin_bounds = margin_bounds
+        self.margin_log: List[Tuple[float, float]] = []  # (regret, margin)
+
+    def observe_shed_regret(self, regret: float):
+        """Feed one counterfactual measurement — the fraction of shed
+        requests that met their deadline in a what-if replay
+        (:func:`repro.core.replay.shed_regret`) — and nudge the margin
+        multiplicatively toward ``target_regret``: shedding work that
+        would have finished means the gate is too tight, so the margin
+        RISES (more permissive); regret under target tightens it.  A
+        no-op unless constructed with ``adaptive=True``."""
+        if not self.adaptive:
+            return
+        lo, hi = self.margin_bounds
+        self.margin = min(max(
+            self.margin * (1.0 + self.adapt_gain
+                           * (float(regret) - self.target_regret)),
+            lo), hi)
+        self.margin_log.append((float(regret), self.margin))
 
     @property
     def predictor(self):

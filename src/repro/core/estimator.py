@@ -79,6 +79,20 @@ class EMAEstimator:
     def snapshot(self, gid: int) -> InstanceEstimate:
         return self._get(gid)
 
+    # -- state snapshot (determinism fingerprints, checkpoints) --------------
+
+    def state(self) -> dict:
+        """JSON-able snapshot of every live estimate, keys sorted so the
+        repr is stable across runs that touched instances in different
+        orders."""
+        return {str(g): [e.q, e.p, e.d, e.n_obs]
+                for g, e in sorted(self.est.items())}
+
+    def load_state(self, st: dict):
+        self.est = {int(g): InstanceEstimate(q=v[0], p=v[1], d=v[2],
+                                             n_obs=int(v[3]))
+                    for g, v in st.items()}
+
     def expected_latency(self, gid: int, input_len: int, pred_out: float,
                          prefix_hit: int = 0) -> float:
         """T(r,g) = q_g + p_g * (L_in - H) + d_g * L_out   (paper Eq. 2)."""

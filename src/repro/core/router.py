@@ -702,4 +702,9 @@ def make_router(name: str, predictor=None, **kw) -> Router:
         return GoodServeRouter(predictor, **kw)
     if name == "oracle":
         return OracleRouter(**kw)
+    if name == "bandit":
+        # lazy: learned_router imports Router from this module
+        # (predictor-less planes fall back to replay.DEFAULT_PRED)
+        from repro.core.learned_router import BanditRouter
+        return BanditRouter(predictor, **kw)
     raise KeyError(name)

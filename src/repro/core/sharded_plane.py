@@ -153,6 +153,12 @@ class ShardedControlPlane(ControlPlane):
         # the replica that emitted the decision (ids stay valid: the
         # decision logs hold references to every registered decision)
         self._owner = {}
+        # (serialized arrivals, sim knobs) captured at attach when any
+        # replica records a decision trace: replicas attach to a
+        # _ReplicaContext with no request list, so the sharded plane —
+        # the one object that sees the Simulator — owns the arrival
+        # snapshot the merged trace needs for replay_whatif
+        self._trace_meta = None
 
     # -- conveniences the bench harness reads --------------------------------
 
@@ -189,8 +195,28 @@ class ShardedControlPlane(ControlPlane):
             ctx = _ReplicaContext(sim.cluster if live
                                   else _StaleCluster(s, sim.cluster))
             s.replica.attach(ctx)
+        if any(s.replica.recorder is not None for s in self.shards):
+            from repro.core.replay import serialize_requests, sim_kw_of
+            self._trace_meta = (serialize_requests(sim.requests),
+                                sim_kw_of(sim))
         if not live:
             self._sync(self.shards, 0.0)
+
+    @property
+    def trace(self):
+        """The per-replica decision streams merged into ONE
+        :class:`~repro.core.replay.DecisionTrace` ordered by event time
+        (arrivals and sim knobs come from the sharded plane's own
+        attach-time snapshot — replica recorders see no request list)."""
+        from repro.core.replay import DecisionTrace
+        recs = [s.replica.recorder for s in self.shards
+                if s.replica.recorder is not None]
+        if not recs:
+            raise ValueError("no replica was constructed with "
+                             "record=True; no trace was recorded")
+        reqs, kw = self._trace_meta or (None, None)
+        return DecisionTrace.merge([r.to_trace() for r in recs],
+                                   requests=reqs, sim_kw=kw)
 
     # -- view sync -----------------------------------------------------------
 

@@ -26,7 +26,8 @@ _SRC = os.path.join(os.path.dirname(__file__), "..", "src", "repro")
                                     "core/control_plane.py",
                                     "core/sharded_plane.py",
                                     "core/migration.py", "core/rectify.py",
-                                    "core/fairness.py"])
+                                    "core/fairness.py", "core/replay.py",
+                                    "core/learned_router.py"])
 def test_no_instance_internals_in_proxy_code(module):
     """Routers, pool/admission controllers, the migration/evacuation
     cost models, and the rectify estimators observe the cluster ONLY

@@ -1,0 +1,551 @@
+"""Counterfactual replay + learned-router correctness (core/replay.py,
+core/learned_router.py):
+
+* DecisionTrace JSON round-trip is exact; malformed artifacts are
+  rejected with ValueError, never half-parsed.
+* Recording is behavior-neutral: record=True replays byte-identical to
+  record=False.
+* ``replay_whatif(trace, same_policy)`` is byte-identical to the
+  original run for EVERY router (the replay harness reconstructs the
+  exact run: arrivals, sim knobs, policy seeds).
+* Terminal failures (shed / cascade / lost) land in the trace as
+  zero-reward outcomes — learners and regret accounting never silently
+  drop failed arms.
+* The doubly-robust off-policy estimate agrees with the live
+  ``replay_whatif`` value on a fixture trace.
+* BanditRouter: state round-trip, warm-start, deterministic exploration,
+  propensity bookkeeping.
+* AdmissionController adaptive margins: direction of the update, hard
+  bounds, and default-off no-op.
+* Sharded planes merge per-replica traces into one time-ordered stream
+  that still drives replay_whatif.
+"""
+import json
+
+import numpy as np
+import pytest
+from conftest import ConstPredictor
+
+from repro.bench.harness import ExperimentSpec, run_experiment
+from repro.cluster import hardware as hwlib
+from repro.cluster.simulator import Cluster, Instance, Simulator
+from repro.cluster.workload import make_workload
+from repro.core.control_plane import ControlPlane
+from repro.core.controller import AdmissionController
+from repro.core.learned_router import BanditRouter, _LinUCBArm, arm_key
+from repro.core.replay import (DecisionTrace, JustEnoughOfflinePolicy,
+                               dr_estimate, realized_value, replay_whatif,
+                               shed_regret)
+from repro.core.router import ALL_BASELINES, make_router
+from repro.core.sharded_plane import make_sharded_plane
+
+FP = hwlib.footprint("llama3.1-8b")
+ROUTERS = [c.name for c in ALL_BASELINES] + ["goodserve", "oracle"]
+
+
+def _pool():
+    return Cluster([Instance(0, hwlib.GPUS["A800"], FP),
+                    Instance(1, hwlib.GPUS["A40"], FP),
+                    Instance(2, hwlib.GPUS["V100"], FP)])
+
+
+def _wl(n=90, seed=3, rps=6.0):
+    # scalar slo_scale: keeps every serialized field a plain float
+    return make_workload(n=n, seed=seed, rps=rps, slo_scale=1.5)
+
+
+def _mk_router(name, seed=0):
+    pred = (ConstPredictor() if name in ("goodserve", "bandit") else None)
+    return make_router(name, predictor=pred, seed=seed)
+
+
+def _fingerprint(requests):
+    return repr([(sr.req.rid, sr.state, sr.instance, sr.tokens_out,
+                  sr.n_migrations, sr.finished_at, tuple(sr.journey))
+                 for sr in sorted(requests, key=lambda s: s.req.rid)])
+
+
+def _record_run(router_name="goodserve", seed=3, n=90, rps=6.0,
+                router_seed=0, **plane_kw):
+    plane = ControlPlane(router=_mk_router(router_name, seed=router_seed),
+                         record=True, **plane_kw)
+    out, dur = Simulator(_pool(), plane, _wl(n=n, seed=seed, rps=rps)).run()
+    return out, plane
+
+
+# ---------------------------------------------------------------------------
+# Artifact: round-trip and validation
+# ---------------------------------------------------------------------------
+
+def test_trace_json_round_trip_exact():
+    _, plane = _record_run()
+    tr = plane.trace
+    text = tr.to_json()
+    tr2 = DecisionTrace.from_json(text)
+    assert tr2.to_json() == text
+    assert tr2.events == tr.events
+    assert tr2.requests == tr.requests
+    assert tr2.sim_kw == tr.sim_kw
+
+
+def test_trace_file_round_trip(tmp_path):
+    _, plane = _record_run(n=40)
+    p = tmp_path / "trace.json"
+    plane.trace.save(str(p))
+    tr2 = DecisionTrace.load(str(p))
+    assert tr2.to_json() == plane.trace.to_json()
+
+
+def test_trace_requests_rebuild_bitexact():
+    """Deserialized Requests equal the originals field-for-field — the
+    precondition for byte-identical re-execution."""
+    reqs = _wl(n=30)
+    plane = ControlPlane(router=_mk_router("goodserve"), record=True)
+    Simulator(_pool(), plane, reqs).run()
+    rebuilt = plane.trace.requests_objects()
+    # the run rewrote nothing on these standalone requests except
+    # arrival bookkeeping; compare the serialized forms
+    import dataclasses
+    for orig, new in zip(sorted(reqs, key=lambda r: r.rid),
+                         sorted(rebuilt, key=lambda r: r.rid)):
+        a, b = dataclasses.asdict(orig), dataclasses.asdict(new)
+        assert set(a) == set(b)
+        for k in a:
+            assert float(a[k]) == float(b[k]) if isinstance(
+                a[k], (int, float)) else a[k] == b[k], k
+
+
+@pytest.mark.parametrize("text", [
+    "not json at all",
+    "[1, 2, 3]",
+    json.dumps({"schema_version": 99, "requests": [], "events": []}),
+    json.dumps({"schema_version": 1, "events": []}),
+    json.dumps({"schema_version": 1, "requests": [], "events": "nope"}),
+    json.dumps({"schema_version": 1, "requests": [],
+                "events": [{"t": 0.0, "rid": 1}]}),
+    json.dumps({"schema_version": 1, "requests": [],
+                "events": [{"t": 0.0, "rid": 1, "kind": "noidea",
+                            "gid": 0, "propensity": 1.0, "context": {},
+                            "candidates": [], "outcome": None}]}),
+])
+def test_malformed_artifact_rejected(text):
+    with pytest.raises(ValueError):
+        DecisionTrace.from_json(text)
+
+
+def test_recording_is_behavior_neutral():
+    """record=True must not perturb the run it records."""
+    plane_off = ControlPlane(router=_mk_router("goodserve"))
+    out_off, _ = Simulator(_pool(), plane_off, _wl()).run()
+    out_on, plane_on = _record_run()
+    assert _fingerprint(out_on) == _fingerprint(out_off)
+    assert repr(plane_on.decision_log) == repr(plane_off.decision_log)
+
+
+def test_trace_covers_every_arrival_with_outcome():
+    out, plane = _record_run()
+    tr = plane.trace
+    assert len(tr.events) == len(out)
+    rids = {e["rid"] for e in tr.events}
+    assert rids == {sr.req.rid for sr in out}
+    for e in tr.events:
+        assert e["outcome"] is not None, e["rid"]
+        if e["kind"] == "route":
+            assert e["candidates"], e["rid"]
+            assert any(c["iid"] == e["gid"] for c in e["candidates"])
+            assert 0.0 < e["propensity"] <= 1.0
+
+
+# ---------------------------------------------------------------------------
+# Zero-reward terminal failures (satellite 6)
+# ---------------------------------------------------------------------------
+
+def test_failed_requests_recorded_as_zero_reward():
+    """Overload a single instance behind a tight admission gate: shed
+    arrivals must appear in the trace as zero-reward outcomes, and every
+    failed (never-completed) request must settle at reward 0.0."""
+    pred = ConstPredictor()
+    plane = ControlPlane(
+        router=make_router("goodserve", predictor=pred),
+        admission=AdmissionController(pred, margin=0.2, min_obs=1),
+        record=True)
+    cluster = Cluster([Instance(0, hwlib.GPUS["V100"], FP)])
+    out, _ = Simulator(cluster, plane, _wl(n=80, rps=20.0)).run()
+    tr = plane.trace
+    failed = [sr for sr in out if sr.finished_at is None]
+    assert failed, "fixture must actually shed/strand work"
+    by_rid = {e["rid"]: e for e in tr.events}
+    for sr in failed:
+        e = by_rid[sr.req.rid]
+        assert e["outcome"] is not None
+        assert e["outcome"]["status"] == "failed"
+        assert e["outcome"]["reward"] == 0.0
+        assert e["outcome"]["deadline_met"] is False
+    shed_events = [e for e in tr.events if e["kind"] == "shed"]
+    assert shed_events
+    assert all(e["outcome"]["reward"] == 0.0 for e in shed_events)
+
+
+# ---------------------------------------------------------------------------
+# What-if replay
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("name", ROUTERS)
+def test_whatif_same_policy_byte_identical(name):
+    out, plane = _record_run(name, n=60)
+    tr = DecisionTrace.from_json(plane.trace.to_json())   # through JSON
+    res = replay_whatif(
+        tr, lambda c: ControlPlane(router=_mk_router(name)), _pool)
+    assert _fingerprint(res.requests) == _fingerprint(out)
+
+
+def test_whatif_bandit_same_policy_byte_identical():
+    out, plane = _record_run("bandit", n=60, router_seed=5)
+    tr = plane.trace
+    res = replay_whatif(
+        tr,
+        lambda c: ControlPlane(router=BanditRouter(
+            predictor=ConstPredictor(), seed=5)),
+        _pool)
+    assert _fingerprint(res.requests) == _fingerprint(out)
+
+
+def test_whatif_accepts_bare_router_and_overrides():
+    _, plane = _record_run(n=40)
+    tr = plane.trace
+    res = replay_whatif(tr, lambda c: _mk_router("round_robin"), _pool)
+    assert len(res.requests) == len(tr.requests)
+    assert res.plane.router.name == "round_robin"
+
+
+def test_whatif_different_policy_changes_trajectory():
+    out, plane = _record_run("goodserve")
+    res = replay_whatif(
+        plane.trace,
+        lambda c: ControlPlane(router=_mk_router("round_robin")), _pool)
+    assert _fingerprint(res.requests) != _fingerprint(out)
+
+
+def test_whatif_requires_arrivals():
+    tr = DecisionTrace(events=[])
+    with pytest.raises(ValueError):
+        replay_whatif(tr, lambda c: _mk_router("round_robin"), _pool)
+
+
+def test_shed_regret_counts_counterfactual_meets():
+    pred = ConstPredictor()
+    plane = ControlPlane(
+        router=make_router("goodserve", predictor=pred),
+        admission=AdmissionController(pred, margin=0.05, min_obs=1),
+        record=True)
+    out, _ = Simulator(_pool(), plane, _wl(n=80, rps=8.0)).run()
+    tr = plane.trace
+    assert any(e["kind"] == "shed" for e in tr.events), \
+        "margin=0.05 must shed in this fixture"
+    # counterfactual: no admission gate at all
+    res = replay_whatif(
+        tr, lambda c: ControlPlane(
+            router=make_router("goodserve", predictor=ConstPredictor())),
+        _pool)
+    reg = shed_regret(tr, res)
+    assert reg["n_shed"] == sum(1 for e in tr.events if e["kind"] == "shed")
+    assert 0.0 <= reg["regret"] <= 1.0
+    assert reg["n_would_meet"] <= reg["n_shed"]
+
+
+# ---------------------------------------------------------------------------
+# Doubly-robust off-policy estimation
+# ---------------------------------------------------------------------------
+
+def _bandit_logging_trace(seed=3, n=110, eps=0.3):
+    b = BanditRouter(predictor=ConstPredictor(), eps=eps, seed=1)
+    plane = ControlPlane(router=b, record=True)
+    out, _ = Simulator(_pool(), plane, _wl(n=n, seed=seed, rps=6.0)).run()
+    return plane.trace, out
+
+
+def test_dr_estimate_matches_live_replay_on_fixture():
+    """The DR estimate of a candidate policy lands near that policy's
+    live what-if value on a logged eps-greedy trace.  Off-policy
+    evaluation is only honest where the logging policy gives the
+    candidate's actions support, so the fixture is the intended
+    production lifecycle: explore cold (eps=0.5), warm-start, log with
+    the WARM eps-greedy router, then score its greedy head.  Tolerance
+    is stated and generous (0.25 absolute on a [0,1] reward): DR removes
+    the re-simulation but not the interference error — the replayed
+    policy changes queueing for everyone."""
+    b0 = BanditRouter(predictor=ConstPredictor(), eps=0.5, seed=1)
+    p0 = ControlPlane(router=b0, record=True)
+    Simulator(_pool(), p0, _wl(n=110, seed=3, rps=5.0)).run()
+    warm = BanditRouter(predictor=ConstPredictor(), eps=0.3, seed=2)
+    warm.warm_start(p0.trace)
+    st = warm.state()
+    p1 = ControlPlane(router=warm, record=True)
+    Simulator(_pool(), p1, _wl(n=110, seed=4, rps=5.0)).run()
+    tr = p1.trace
+
+    def greedy():
+        b = BanditRouter(predictor=ConstPredictor(), eps=0.0, seed=0)
+        b.load_state(st)
+        b.eps = 0.0
+        return b
+
+    est = dr_estimate(tr, greedy())
+    res = replay_whatif(tr, lambda c: ControlPlane(router=greedy()), _pool)
+    live = realized_value(res, tr)
+    assert abs(est["value"] - live) <= 0.25, (est, live)
+    assert est["n"] == len(tr.route_events())
+    assert est["match_rate"] > 0.5      # the support precondition held
+
+
+def test_dr_estimate_of_behavior_policy_recovers_logged_value():
+    """Scoring a clone of the LOGGING policy: the importance weights fire
+    on (nearly) every event and DR collapses toward the empirical mean
+    reward of the trace itself."""
+    tr, out = _bandit_logging_trace()
+
+    class LoggedChoice:
+        def offline_choose(self, event):
+            return event["gid"]
+
+    est = dr_estimate(tr, LoggedChoice())
+    assert est["match_rate"] == 1.0
+    # DR over a full-match policy: value = mean(qhat + w*(r - qhat));
+    # with clipped weights it should hug the behavior value
+    assert abs(est["value"] - est["behavior_value"]) <= 0.2
+
+
+def test_dr_estimate_requires_outcomes():
+    with pytest.raises(ValueError):
+        dr_estimate(DecisionTrace(), JustEnoughOfflinePolicy())
+
+
+def test_offline_heuristic_policy_scores_from_frozen_features():
+    tr, _ = _bandit_logging_trace(n=60)
+    pol = JustEnoughOfflinePolicy()
+    for e in tr.route_events():
+        iid = pol.offline_choose(e)
+        assert iid in {c["iid"] for c in e["candidates"]}
+
+
+# ---------------------------------------------------------------------------
+# BanditRouter mechanics
+# ---------------------------------------------------------------------------
+
+def test_bandit_state_round_trip():
+    tr, _ = _bandit_logging_trace(n=60)
+    b = BanditRouter(predictor=ConstPredictor(), eps=0.2, seed=4)
+    b.warm_start(tr)
+    st = b.state()
+    assert json.loads(json.dumps(st)) == st          # JSON-able
+    b2 = BanditRouter(predictor=ConstPredictor(), eps=0.9, seed=4)
+    b2.load_state(st)
+    assert repr(b2.state()) == repr(st)
+    assert b2.eps == 0.2                              # knobs restored
+    for key in st["arms"]:
+        np.testing.assert_array_equal(b2.arms[key].A, b.arms[key].A)
+        np.testing.assert_array_equal(b2.arms[key].b, b.arms[key].b)
+
+
+def test_bandit_warm_start_counts_failures():
+    """Warm-start consumes every routed event with a settled outcome —
+    zero-reward failures included."""
+    pred = ConstPredictor()
+    plane = ControlPlane(router=BanditRouter(predictor=pred, eps=0.4,
+                                             seed=2),
+                         record=True)
+    cluster = Cluster([Instance(0, hwlib.GPUS["V100"], FP),
+                       Instance(1, hwlib.GPUS["V100"], FP)])
+    out, _ = Simulator(cluster, plane, _wl(n=80, rps=25.0)).run()
+    tr = plane.trace
+    routed = tr.route_events()
+    zero = [e for e in routed if e["outcome"]["reward"] == 0.0]
+    assert zero, "overload fixture must produce zero-reward pulls"
+    b = BanditRouter(predictor=pred, eps=0.0, seed=0)
+    assert b.warm_start(tr) == len(routed)
+    pulls = sum(arm.n for arm in b.arms.values())
+    assert pulls == len(routed)
+
+
+def test_bandit_propensity_bookkeeping():
+    """Propensities follow eps-greedy exactly: eps/k on a non-greedy
+    explore, eps/k + (1-eps) on the greedy arm, 1.0 when eps=0."""
+    tr, _ = _bandit_logging_trace(eps=0.3)
+    ks = {len(e["candidates"]) for e in tr.route_events()}
+    for e in tr.route_events():
+        k = len(e["candidates"])
+        if k <= 1:
+            assert e["propensity"] == 1.0
+            continue
+        lo, hi = 0.3 / k, 0.3 / k + 0.7
+        assert e["propensity"] in (pytest.approx(lo), pytest.approx(hi))
+        if e["gid"] == e["greedy_gid"]:
+            assert e["propensity"] == pytest.approx(hi)
+    tr0, _ = _bandit_logging_trace(eps=0.0, n=40)
+    assert all(e["propensity"] == 1.0 for e in tr0.route_events())
+    assert ks, "fixture routed nothing"
+
+
+def test_bandit_settles_each_request_once():
+    b = BanditRouter(predictor=ConstPredictor(), eps=0.2, seed=3)
+    plane = ControlPlane(router=b, record=True)
+    out, _ = Simulator(_pool(), plane, _wl(n=60)).run()
+    assert not b._pending, "every routed request must settle its arm"
+    total = sum(arm.n for arm in b.arms.values())
+    routed = [e for e in plane.trace.events if e["kind"] == "route"]
+    assert total == len(routed)
+
+
+def test_linucb_arm_learns_direction():
+    arm = _LinUCBArm(3, lam=1.0)
+    good, bad = [1.0, 1.0, 0.0], [1.0, 0.0, 1.0]
+    for _ in range(50):
+        arm.update(good, 1.0)
+        arm.update(bad, 0.0)
+    assert arm.score(good, alpha=0.0) > arm.score(bad, alpha=0.0)
+    st = arm.state()
+    again = _LinUCBArm.from_state(st)
+    assert again.score(good, 0.3) == arm.score(good, 0.3)
+    assert arm_key("A800", 2) == "A800|2"
+
+
+# ---------------------------------------------------------------------------
+# Adaptive admission margins (satellite 1)
+# ---------------------------------------------------------------------------
+
+def test_adaptive_margin_default_off_is_noop():
+    a = AdmissionController(ConstPredictor(), margin=1.0)
+    a.observe_shed_regret(0.9)
+    assert a.margin == 1.0
+    assert a.margin_log == []
+
+
+def test_adaptive_margin_moves_toward_target():
+    a = AdmissionController(ConstPredictor(), margin=1.0, adaptive=True,
+                            target_regret=0.05)
+    a.observe_shed_regret(0.5)     # shedding work that would have met:
+    assert a.margin > 1.0          # loosen the gate
+    m = a.margin
+    a.observe_shed_regret(0.0)     # no regret: tighten
+    assert a.margin < m
+    assert len(a.margin_log) == 2
+
+
+def test_adaptive_margin_bounded():
+    a = AdmissionController(ConstPredictor(), margin=1.0, adaptive=True,
+                            adapt_gain=50.0, margin_bounds=(0.25, 4.0))
+    for _ in range(10):
+        a.observe_shed_regret(1.0)
+    assert a.margin == 4.0
+    for _ in range(40):
+        a.observe_shed_regret(0.0)
+    assert a.margin == 0.25
+
+
+def test_adaptive_margin_closes_loop_through_replay():
+    """End-to-end learning path: record with a too-tight gate, measure
+    shed regret by replaying without the gate, feed it back — the
+    adapted margin must be more permissive."""
+    pred = ConstPredictor()
+    adm = AdmissionController(pred, margin=0.05, min_obs=1, adaptive=True)
+    plane = ControlPlane(router=make_router("goodserve", predictor=pred),
+                         admission=adm, record=True)
+    Simulator(_pool(), plane, _wl(n=80, rps=8.0)).run()
+    tr = plane.trace
+    res = replay_whatif(
+        tr, lambda c: ControlPlane(
+            router=make_router("goodserve", predictor=ConstPredictor())),
+        _pool)
+    reg = shed_regret(tr, res)
+    assert reg["n_shed"] > 0
+    before = adm.margin
+    adm.observe_shed_regret(reg["regret"])
+    if reg["regret"] > adm.target_regret:
+        assert adm.margin > before
+
+
+# ---------------------------------------------------------------------------
+# Sharded traces + trainable harness specs
+# ---------------------------------------------------------------------------
+
+def test_sharded_plane_merges_replica_traces():
+    def mk(i):
+        return ControlPlane(router=BanditRouter(predictor=ConstPredictor(),
+                                                eps=0.3, seed=1),
+                            record=True)
+    sp = make_sharded_plane(2, mk, sync_interval_s=1.0)
+    out, _ = Simulator(_pool(), sp, _wl(n=80)).run()
+    tr = sp.trace
+    assert len(tr.requests) == 80
+    assert tr.sim_kw                      # attach-time knob snapshot
+    ts = [e["t"] for e in tr.events]
+    assert ts == sorted(ts)               # global time order
+    assert {e["rid"] for e in tr.events} == {sr.req.rid for sr in out}
+    # the merged artifact drives replay like an unsharded one
+    res = replay_whatif(
+        tr, lambda c: ControlPlane(
+            router=make_router("goodserve", predictor=ConstPredictor())),
+        _pool)
+    assert len(res.requests) == 80
+
+
+def test_sharded_plane_without_recording_raises():
+    sp = make_sharded_plane(
+        2, lambda i: ControlPlane(router=_mk_router("round_robin")))
+    Simulator(_pool(), sp, _wl(n=20)).run()
+    with pytest.raises(ValueError):
+        sp.trace
+
+
+def test_unrecorded_plane_trace_raises():
+    plane = ControlPlane(router=_mk_router("round_robin"))
+    Simulator(_pool(), plane, _wl(n=20)).run()
+    with pytest.raises(ValueError):
+        plane.trace
+
+
+def test_harness_trainable_spec_passes_artifact():
+    """ExperimentSpec.train runs once; every seed's plane factory gets
+    the same trained artifact."""
+    tr, _ = _bandit_logging_trace(n=60)
+    seen = []
+
+    def plane_factory(cluster, trained):
+        seen.append(trained)
+        b = BanditRouter(predictor=ConstPredictor(), eps=0.05, seed=0)
+        b.load_state(trained)
+        return ControlPlane(router=b)
+
+    def train():
+        b = BanditRouter(predictor=ConstPredictor(), eps=0.0, seed=0)
+        b.warm_start(tr)
+        return b.state()
+
+    spec = ExperimentSpec(
+        name="trainable", pool=_pool, workload=lambda s: _wl(n=30, seed=s),
+        plane=plane_factory, seeds=(0, 1), train=train)
+    results = run_experiment(spec)
+    assert len(results) == 2
+    assert len(seen) == 2
+    assert seen[0] is seen[1]             # trained exactly once
+    assert seen[0]["arms"]
+
+
+def test_bandit_routes_and_records_without_a_predictor():
+    """A predictor-less BanditRouter must not crash: live routing falls
+    back to the same fixed remaining-work scale (replay.DEFAULT_PRED)
+    the recorder uses, so logged features equal live features."""
+    from repro.core import replay
+    plane = ControlPlane(router=BanditRouter(eps=0.4, seed=1), record=True)
+    out, _ = Simulator(_pool(), plane, _wl(n=40)).run()
+    assert all(sr.state == "done" for sr in out)
+    tr = plane.trace
+    routes = tr.route_events()
+    assert routes
+    for e in routes:
+        assert e["context"]["pred"] == pytest.approx(replay.DEFAULT_PRED)
+    # the logged trace is usable downstream: warm-start + offline score
+    b = BanditRouter(eps=0.0, seed=2)
+    assert b.warm_start(tr) == len(routes)
+    est = replay.dr_estimate(tr, b)
+    assert est["n"] == len(routes)
